@@ -1,0 +1,20 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,68 @@
+"""Paper Table II analog: kernel-suite coverage per framework/lowering.
+
+Frameworks modeled (SVII-A):
+  naive        - MCUDA-without-fission (single-stage kernels only)
+  loop_nowarp  - DPC++/HIP-CPU class (barriers ok, no warp intrinsics)
+  loop         - CuPBoP/COX loop lowering (full)
+  vector       - CuPBoP-JAX TPU vector lowering (full)
+  pallas       - CuPBoP-JAX Pallas emission (full)
+
+The paper's headline: CuPBoP 69.6% vs 56.5% on Rodinia; Crystal 100% vs 0/76.9
+(warp shuffle + atomicCAS gaps).  Our suite reproduces the *ordering* with the
+same feature-driven gaps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UnsupportedKernel, launch
+from repro.core.cuda_suite import build_suite
+
+FRAMEWORKS = ("naive", "loop_nowarp", "loop", "vector", "pallas")
+
+
+def run() -> dict:
+    suite = build_suite(scale=1)
+    rng = np.random.default_rng(0)
+    table = {}
+    for e in suite:
+        row = {}
+        args = e.make_args(rng)
+        want = e.reference(args)
+        for fw in FRAMEWORKS:
+            try:
+                out = launch(e.kernel, grid=e.grid, block=e.block,
+                             args={k: jnp.asarray(v) for k, v in args.items()},
+                             backend=fw, dyn_shared=e.dyn_shared)
+                ok = all(np.allclose(np.asarray(out[k]), v, rtol=2e-5,
+                                     atol=2e-5) for k, v in want.items())
+                row[fw] = "correct" if ok else "incorrect"
+            except UnsupportedKernel:
+                row[fw] = "unsupport"
+        table[e.name] = (row, e.features)
+    return table
+
+
+def main():
+    table = run()
+    names = sorted(table)
+    print("kernel," + ",".join(FRAMEWORKS) + ",features")
+    for n in names:
+        row, feats = table[n]
+        print(n + "," + ",".join(row[f] for f in FRAMEWORKS)
+              + "," + "|".join(feats))
+    print()
+    for fw in FRAMEWORKS:
+        cov = 100.0 * sum(table[n][0][fw] == "correct" for n in names) \
+            / len(names)
+        print(f"coverage_{fw},{cov:.1f},%")
+    cov = {fw: sum(table[n][0][fw] == "correct" for n in names)
+           for fw in FRAMEWORKS}
+    assert cov["naive"] < cov["loop_nowarp"] < cov["loop"] == cov["vector"], \
+        "paper's coverage ordering must reproduce"
+    print("paper_ordering,1,naive<nowarp<cupbop (Table II reproduced)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table IV analog: end-to-end suite wall time per lowering (CPU
+backend = the paper's non-NVIDIA device).
+
+Columns: loop (paper-faithful CuPBoP), vector (TPU-style vectorized MPMD -
+the optimization SVI-C says CPUs are missing).  The vector/loop speedup is
+this machine's analogue of the DPC++-vectorization wins on EP/KMeans.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import launch
+from repro.core.cuda_suite import build_suite
+
+
+def main(scale: int = 4):
+    suite = build_suite(scale=scale)
+    rng = np.random.default_rng(0)
+    print("kernel,loop_us,vector_us,speedup")
+    geo = []
+    for e in suite:
+        args = {k: jnp.asarray(v) for k, v in e.make_args(rng).items()}
+        ts = {}
+        for backend in ("loop", "vector"):
+            fn = lambda: launch(e.kernel, grid=e.grid, block=e.block,
+                                args=args, backend=backend,
+                                dyn_shared=e.dyn_shared)
+            ts[backend] = time_call(fn, warmup=1, iters=3) * 1e6
+        sp = ts["loop"] / ts["vector"]
+        geo.append(sp)
+        print(f"{e.name},{ts['loop']:.0f},{ts['vector']:.0f},{sp:.2f}")
+    gm = float(np.exp(np.mean(np.log(geo))))
+    print(f"geomean_speedup,{gm:.2f},vector over loop")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 11 analog: 1000 kernel launches + synchronization.
+
+Compares stream policies on the same launch sequence:
+  * HAZARD_ONLY (CuPBoP): async launches, barrier only on the final read;
+  * SYNC_ALWAYS (HIP-CPU): barrier after every launch.
+
+The paper measures the context-switch/synchronization gap between software
+schedulers; here the gap is JAX dispatch pipelining vs blocking every step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Policy, Stream
+from repro.core.cuda_suite import make_vecadd
+
+N_LAUNCH = 1000
+
+
+def main():
+    n, block = 4096, 128
+    rng = np.random.default_rng(0)
+    kernel = make_vecadd(n)
+    bufs = {"a": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "b": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "c": jnp.zeros(n, jnp.float32)}
+    results = {}
+    for pol in (Policy.HAZARD_ONLY, Policy.SYNC_ALWAYS):
+        s = Stream(dict(bufs), policy=pol)
+        s.launch(kernel, grid=-(-n // block), block=block)   # compile warmup
+        s.synchronize()
+        t0 = time.perf_counter()
+        for _ in range(N_LAUNCH):
+            s.launch(kernel, grid=-(-n // block), block=block)
+        _ = s.memcpy_d2h("c")
+        dt = time.perf_counter() - t0
+        results[pol.value] = (dt, s.stats.syncs)
+        print(f"{pol.value},{dt*1e6/N_LAUNCH:.1f},us/launch syncs="
+              f"{s.stats.syncs}")
+    h, a = results["hazard_only"][0], results["sync_always"][0]
+    print(f"async_speedup,{a/h:.2f},hazard-only vs sync-always "
+          f"(paper: CuPBoP 30% faster than HIP-CPU on FIR)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 9 analog / deliverable (g): roofline table from the dry-run.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) three-term roofline, dominant bottleneck,
+MODEL/HLO flops ratio, and a one-line mitigation hint.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HINT = {
+    "compute": "raise MXU utilization: fuse pads away, drop remat factor",
+    "memory": "cut HBM traffic: Pallas-fuse attention tiles, bf16 "
+              "intermediates, fewer converts",
+    "collective": "reshard: overlap collectives with compute, shrink TP "
+                  "activations, compress cross-pod grads",
+}
+
+
+def rows(out_dir="experiments/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        rf, m = r["roofline"], r["memory"]
+        out.append({
+            "cell": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "model_ratio": rf["model_over_hlo_flops"],
+            "adj_ratio": rf["adj_model_over_hlo_flops"],
+            "mfu_bound": rf["mfu_bound"],
+            "mem_gb": m["peak_per_chip_gb"],
+            "fits": m.get("fits_16gb_hbm", m["peak_per_chip_gb"] <= 16),
+        })
+    return out
+
+
+def main():
+    data = rows()
+    if not data:
+        print("no_dryrun_data,0,run repro.launch.dryrun --all first")
+        return
+    print("cell,compute_s,memory_s,collective_s,dominant,model/hlo,"
+          "adj_model/hlo,mfu_bound,mem_gb,fits16gb,hint")
+    for r in data:
+        print(f"{r['cell']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+              f"{r['collective_s']:.4f},{r['dominant']},"
+              f"{r['model_ratio']:.3f},{r['adj_ratio']:.3f},"
+              f"{r['mfu_bound']:.4f},{r['mem_gb']:.2f},{int(r['fits'])},"
+              f"\"{HINT[r['dominant']]}\"")
+    doms = {}
+    for r in data:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"summary,{len(data)},dominants={doms} "
+          f"fits={sum(r['fits'] for r in data)}/{len(data)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: async, atomic, validated, mesh-agnostic.
+
+Production properties implemented (and unit-tested):
+* **async**: the host thread snapshots to numpy and hands off to a writer
+  thread - the training loop never blocks on disk;
+* **atomic**: write to ``step_N.tmp`` then ``os.rename`` - a crash mid-write
+  never corrupts the latest checkpoint;
+* **validated**: a manifest records per-leaf shape/dtype + SHA256; restore
+  verifies and falls back to the previous checkpoint on mismatch (node
+  failures mid-save are survivable);
+* **mesh-agnostic / elastic**: leaves are stored logically (full arrays);
+  ``restore(..., mesh=...)`` device_puts onto *any* mesh's param specs, so a
+  16x16 run restores onto 2x16x16 or 8x16 (elastic scaling). At multi-host
+  scale the same layout maps onto per-host shard files keyed by the same
+  manifest - single-process here, documented in DESIGN.md;
+* **retention**: keep-last-K with the newest always valid before pruning;
+* **data state**: the pipeline step is in the manifest, and the pipeline is
+  seekable, so restart resumes the exact token stream.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = False):
+        """Snapshot to host, then write asynchronously."""
+        host = [(n, np.asarray(jax.device_get(l)))
+                for n, l in _leaf_paths(tree)]
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host, extra: dict):
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for name, arr in host:
+            fn = f"{name}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self.saves += 1
+        self._prune()
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def _validate(self, path: str) -> Optional[dict]:
+        mf = os.path.join(path, "manifest.json")
+        if not os.path.exists(mf):
+            return None
+        with open(mf) as f:
+            manifest = json.load(f)
+        for name, meta in manifest["leaves"].items():
+            fp = os.path.join(path, meta["file"])
+            if not os.path.exists(fp):
+                return None
+            try:
+                arr = np.load(fp)
+            except Exception:          # truncated / garbage file
+                return None
+            if hashlib.sha256(arr.tobytes()).hexdigest() != meta["sha256"]:
+                return None
+        return manifest
+
+    def latest_valid(self) -> Optional[int]:
+        for s in reversed(self.all_steps()):
+            if self._validate(os.path.join(self.dir, f"step_{s:08d}")):
+                return s
+        return None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                mesh=None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template``; reshard onto ``mesh``."""
+        step = step if step is not None else self.latest_valid()
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        manifest = self._validate(path)
+        if manifest is None:
+            raise IOError(f"checkpoint {path} failed validation")
+        named = dict(_leaf_paths(template))
+        loaded = {}
+        for name in named:
+            meta = manifest["leaves"][name]
+            loaded[name] = np.load(os.path.join(path, meta["file"]))
+        flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for pathk, leaf in flat:
+            name = "_".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+            leaves.append(loaded[name].astype(leaf.dtype))
+        tree = jax.tree_util.tree_unflatten(tdef, leaves)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_params
+            tree = shard_params(tree, mesh)
+        return tree, manifest["extra"]

@@ -1,0 +1,15 @@
+"""CuPBoP-JAX core: the paper's SPMD-to-MPMD transform + runtime, in JAX."""
+from repro.core.api import BACKENDS, launch, supported
+from repro.core.kernel import (
+    WARP_SIZE,
+    BlockState,
+    Ctx,
+    KernelDef,
+    UnsupportedKernel,
+)
+from repro.core.streams import Policy, Stream
+
+__all__ = [
+    "BACKENDS", "launch", "supported", "WARP_SIZE", "BlockState", "Ctx",
+    "KernelDef", "UnsupportedKernel", "Policy", "Stream",
+]

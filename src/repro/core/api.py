@@ -1,0 +1,99 @@
+"""Kernel-launch API: ``launch(kernel, <<<grid, block, dyn_shared>>>, args)``.
+
+Launch configurations are JIT-specialized per (kernel, backend, grid, block,
+grain, shapes) - the same choice POCL makes ("replaces these variables with
+actual values during the kernel launch... makes MPMD kernels easy to
+optimize", paper SVII-A.1); the compiled-launch cache plays the role of
+CuPBoP's once-per-program thread pool: one expensive setup, then cheap
+launches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grain as grain_mod
+from repro.core import lower_loop, lower_vector, pallas_emit, packing
+from repro.core.kernel import KernelDef, UnsupportedKernel
+
+BACKENDS = ("loop", "loop_nowarp", "naive", "vector", "pallas")
+
+_LAUNCH_CACHE: dict = {}
+
+
+def _build(kernel: KernelDef, backend: str, grid: int, block: int,
+           grain: int, dyn_shared, treedef, interpret: bool):
+    def fn(*leaves):
+        glob = packing.unpack(leaves, treedef)  # kernel prologue (SIII-C.2)
+        if backend == "loop":
+            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                                  grain=grain, dyn_shared=dyn_shared)
+        if backend == "loop_nowarp":
+            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                                  grain=grain, dyn_shared=dyn_shared,
+                                  allow_warp=False)
+        if backend == "naive":
+            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                                  grain=grain, dyn_shared=dyn_shared,
+                                  allow_fission=False, allow_warp=False)
+        if backend == "vector":
+            return lower_vector.run(kernel, grid=grid, block=block, glob=glob,
+                                    grain=grain, dyn_shared=dyn_shared)
+        if backend == "pallas":
+            return pallas_emit.run(kernel, grid=grid, block=block, glob=glob,
+                                   grain=grain, dyn_shared=dyn_shared,
+                                   interpret=interpret)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    return jax.jit(fn)
+
+
+def launch(kernel: KernelDef, *, grid: int, block: int, args: dict,
+           backend: str = "vector", grain: int | str = 1,
+           dyn_shared: int | None = None, interpret: bool = True,
+           pool: int | None = None) -> dict:
+    """Launch ``kernel`` over ``grid`` blocks of ``block`` threads.
+
+    ``args`` maps global-buffer names to arrays; returns the dict with the
+    kernel's written buffers replaced.  ``grain`` may be an int, "average",
+    or "aggressive" (paper SIV-A heuristics; ``pool`` = worker count).
+    """
+    if isinstance(grain, str):
+        pool = pool or jax.device_count()
+        if grain == "average":
+            grain = grain_mod.average_grain(grid, pool)
+        elif grain == "aggressive":
+            grain = grain_mod.heuristic_grain(grid, pool,
+                                              kernel.est_block_work)
+        else:
+            raise ValueError(f"unknown grain policy {grain!r}")
+    grain = max(1, min(int(grain), grid))
+
+    leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
+    key = (
+        id(kernel), backend, grid, block, grain, dyn_shared, interpret,
+        treedef, tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves),
+    )
+    if key not in _LAUNCH_CACHE:
+        # surface UnsupportedKernel eagerly (coverage probes rely on this)
+        probe = _build(kernel, backend, grid, block, grain, dyn_shared,
+                       treedef, interpret)
+        jax.eval_shape(probe, *leaves)
+        _LAUNCH_CACHE[key] = probe
+    return _LAUNCH_CACHE[key](*leaves)
+
+
+def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,
+              args=None, dyn_shared=None) -> bool:
+    """Coverage probe: can ``backend`` express ``kernel``? (Table II cell)."""
+    try:
+        if args is None:
+            raise ValueError("supported() needs representative args")
+        launch(kernel, grid=grid, block=block, args=args, backend=backend,
+               dyn_shared=dyn_shared)
+        return True
+    except UnsupportedKernel:
+        return False

@@ -1,0 +1,50 @@
+"""CUDA atomics, adapted for TPU (DESIGN.md S2, deviation #2).
+
+TPU Pallas exposes no global-memory atomics.  The semantics-preserving
+adaptation relies on two facts of the lowered execution model:
+
+* within one vectorized scatter, XLA's ``scatter-add`` accumulates duplicate
+  indices deterministically - a *stronger* guarantee than CUDA's unordered
+  atomicAdd;
+* across blocks, grid steps of a Pallas kernel on one TensorCore (and the
+  block fori_loop of the loop/vector lowerings) execute sequentially, so
+  read-modify-write accumulation into the output buffer is race-free.
+
+atomicCAS has no order-free equivalent; we provide the *first-wins* variant
+(lowest thread id wins each index), which is sufficient for the lock/claim
+idioms in Crystal-style database kernels and is deterministic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def atomic_add(arr, idx, val):
+    return arr.at[idx].add(val)
+
+
+def atomic_max(arr, idx, val):
+    return arr.at[idx].max(val)
+
+
+def atomic_min(arr, idx, val):
+    return arr.at[idx].min(val)
+
+
+def atomic_cas_first(arr, idx, cmp, val):
+    """compare-and-swap, first-wins across duplicate indices.
+
+    For each position ``idx[t]``: if ``arr[idx[t]] == cmp[t]`` the value of
+    the *lowest* t whose compare succeeds is stored.  Implemented by masking
+    duplicate indices so only the first occurrence scatters.
+    """
+    idx = jnp.asarray(idx)
+    n = idx.shape[0]
+    # first occurrence of each index among the chunk
+    eq = idx[None, :] == idx[:, None]                       # [t, t']
+    lower = jnp.tril(jnp.ones((n, n), dtype=bool), k=-1)
+    is_first = ~jnp.any(eq & lower, axis=1)
+    old = arr[idx]
+    ok = (old == cmp) & is_first
+    safe_idx = jnp.where(ok, idx, arr.shape[0])             # OOB drops
+    return arr.at[safe_idx].set(jnp.where(ok, val, 0), mode="drop")

@@ -1,0 +1,452 @@
+"""CUDA-style SPMD kernel suite (the paper's Rodinia/Hetero-Mark stand-ins).
+
+Each entry is a kernel authored in the CuPBoP-JAX IR plus a pure-numpy oracle.
+The suite spans the CUDA features whose support differentiates frameworks in
+the paper's Table II:
+
+| kernel              | paper analogue          | features exercised           |
+|---------------------|-------------------------|------------------------------|
+| vecadd              | Listing 1               | plain SPMD                   |
+| reverse             | Listing 3 dynamicReverse| dynamic __shared__, barrier  |
+| histogram           | Hetero-Mark HIST        | global atomics, strided access (Fig. 10a) |
+| reduce_shared       | Rodinia-style reduction | barrier tree, log2 fission   |
+| reduce_warp         | Crystal q11-q13         | warp shuffle (COX nesting)   |
+| matmul_tiled        | lud/gemm                | shared tiling, register demotion across many barriers |
+| stencil1d           | hotspot                 | halo loads, barrier          |
+| softmax_row         | attention primitive     | two barriers                 |
+| scan_block          | pathfinder/scan         | Hillis-Steele, 2x log2 stages|
+| transpose_tiled     | SVI-C reordering demo   | shared staging, coalescing   |
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel import KernelDef
+
+OOB = 1 << 30  # out-of-bounds sentinel for mode="drop" stores
+
+
+def _gid(ctx):
+    return ctx.bid * ctx.block_dim + ctx.tid
+
+
+# --------------------------------------------------------------------------
+# vecadd (paper Listing 1)
+# --------------------------------------------------------------------------
+def make_vecadd(n: int) -> KernelDef:
+    def stage(ctx, st):
+        gid = _gid(ctx)
+        val = st.glob["a"][gid] + st.glob["b"][gid]
+        idx = jnp.where(gid < n, gid, OOB)
+        return st.set_glob(c=st.glob["c"].at[idx].set(val, mode="drop"))
+
+    return KernelDef("vecadd", (stage,), writes=("c",), est_block_work=3e2)
+
+
+# --------------------------------------------------------------------------
+# reverse (paper Listing 3: extern __shared__, one __syncthreads)
+# --------------------------------------------------------------------------
+def make_reverse() -> KernelDef:
+    def load(ctx, st):
+        s = st.shared["s"].at[ctx.tid].set(st.glob["d"][ctx.tid])
+        return st.set_shared(s=s)
+
+    def store(ctx, st):
+        n = st.shared["s"].shape[0]
+        d = st.glob["d"].at[ctx.tid].set(st.shared["s"][n - ctx.tid - 1])
+        return st.set_glob(d=d)
+
+    return KernelDef(
+        "reverse", (load, store), writes=("d",),
+        shared={"s": ((-1,), jnp.int32)}, est_block_work=2e2,
+    )
+
+
+# --------------------------------------------------------------------------
+# histogram (Hetero-Mark HIST; GPU-coalesced stride of Fig. 10a by default)
+# --------------------------------------------------------------------------
+def make_histogram(n: int, nbins: int, total_threads: int,
+                   layout: str = "coalesced") -> KernelDef:
+    iters = math.ceil(n / total_threads)
+
+    def stage(ctx, st):
+        x, hist = st.glob["x"], st.glob["hist"]
+        gid = _gid(ctx)
+        for k in range(iters):
+            if layout == "coalesced":      # GPU-friendly large stride
+                idx = gid + k * total_threads
+            else:                          # CPU-friendly contiguous (Fig 10c)
+                idx = gid * iters + k
+            v = x[jnp.minimum(idx, n - 1)]
+            bin_ = jnp.where(idx < n, v, OOB)
+            hist = hist.at[bin_].add(1, mode="drop")
+        return st.set_glob(hist=hist)
+
+    return KernelDef(f"histogram_{layout}", (stage,), writes=("hist",),
+                     est_block_work=3e2 * iters)
+
+
+# --------------------------------------------------------------------------
+# reduce_shared: classic barrier-tree block reduction (log2(block) stages)
+# --------------------------------------------------------------------------
+def make_reduce_shared(n: int, block: int) -> KernelDef:
+    assert block & (block - 1) == 0, "block must be a power of two"
+
+    def load(ctx, st):
+        gid = _gid(ctx)
+        v = jnp.where(gid < n, st.glob["x"][jnp.minimum(gid, n - 1)], 0.0)
+        return st.set_shared(s=st.shared["s"].at[ctx.tid].set(v))
+
+    def make_level(offset):
+        def level(ctx, st):
+            s = st.shared["s"]
+            partner = s[ctx.tid + offset]
+            new = jnp.where(ctx.tid < offset, s[ctx.tid] + partner, s[ctx.tid])
+            return st.set_shared(s=s.at[ctx.tid].set(new))
+        return level
+
+    def store(ctx, st):
+        idx = jnp.where(ctx.tid == 0, ctx.bid, OOB)
+        out = st.glob["out"].at[idx].set(st.shared["s"][0], mode="drop")
+        return st.set_glob(out=out)
+
+    stages = [load]
+    off = block // 2
+    while off >= 1:
+        stages.append(make_level(off))
+        off //= 2
+    stages.append(store)
+    return KernelDef(
+        "reduce_shared", tuple(stages), writes=("out",),
+        shared={"s": ((block,), jnp.float32)}, est_block_work=block * 8.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# reduce_warp: shuffle-based reduction (warp-level features; COX/CuPBoP only)
+# --------------------------------------------------------------------------
+def make_reduce_warp(n: int, block: int) -> KernelDef:
+    nwarps = block // 32
+
+    def warp_phase(ctx, st):
+        gid = _gid(ctx)
+        val = jnp.where(gid < n, st.glob["x"][jnp.minimum(gid, n - 1)], 0.0)
+        for off in (16, 8, 4, 2, 1):
+            val = val + ctx.shfl_xor(val, off)
+        idx = jnp.where(ctx.lane == 0, ctx.warp, OOB)
+        return st.with_priv({"v": val}).set_shared(
+            s=st.shared["s"].at[idx].set(val, mode="drop"))
+
+    def final_phase(ctx, st):
+        s = st.shared["s"]
+        v = jnp.where(ctx.tid < nwarps, s[jnp.minimum(ctx.tid, nwarps - 1)],
+                      0.0)
+        for off in (16, 8, 4, 2, 1):
+            v = v + ctx.shfl_xor(v, off)
+        idx = jnp.where(ctx.tid == 0, ctx.bid, OOB)
+        return st.with_priv({}).set_glob(
+            out=st.glob["out"].at[idx].set(v, mode="drop"))
+
+    return KernelDef(
+        "reduce_warp", (warp_phase, final_phase), writes=("out",),
+        shared={"s": ((nwarps,), jnp.float32)}, uses_warp=True,
+        est_block_work=block * 4.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# matmul_tiled: shared-memory tiled GEMM; acc is a register demoted across
+# 2*KT barriers (the hard case for fission correctness)
+# --------------------------------------------------------------------------
+def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
+    assert m % tile == 0 and n % tile == 0 and k % tile == 0
+    kt = k // tile
+    ntiles_n = n // tile
+
+    def coords(ctx):
+        ty, tx = ctx.tid // tile, ctx.tid % tile
+        by, bx = ctx.bid // ntiles_n, ctx.bid % ntiles_n
+        return ty, tx, by * tile + ty, bx * tile + tx
+
+    def init(ctx, st):
+        return st.with_priv({"acc": jnp.zeros(ctx.tid.shape, jnp.float32)})
+
+    def make_load(kk):
+        def load(ctx, st):
+            ty, tx, row, col = coords(ctx)
+            sa = st.shared["sa"].at[ty, tx].set(st.glob["a"][row, kk * tile + tx])
+            sb = st.shared["sb"].at[ty, tx].set(st.glob["b"][kk * tile + ty, col])
+            return st.set_shared(sa=sa, sb=sb)
+        return load
+
+    def compute(ctx, st):
+        ty, tx, _, _ = coords(ctx)
+        sa, sb = st.shared["sa"], st.shared["sb"]
+        acc = st.priv["acc"] + jnp.einsum("ti,it->t", sa[ty, :], sb[:, tx])
+        return st.with_priv({"acc": acc})
+
+    def store(ctx, st):
+        _, _, row, col = coords(ctx)
+        c = st.glob["c"].at[row, col].set(st.priv["acc"])
+        return st.with_priv({}).set_glob(c=c)
+
+    stages = [init]
+    for kk in range(kt):
+        stages += [make_load(kk), compute]
+    stages.append(store)
+    return KernelDef(
+        "matmul_tiled", tuple(stages), writes=("c",),
+        shared={"sa": ((tile, tile), jnp.float32),
+                "sb": ((tile, tile), jnp.float32)},
+        est_block_work=tile * tile * k * 2.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# stencil1d (hotspot-like 3-point stencil with shared halo)
+# --------------------------------------------------------------------------
+def make_stencil1d(n: int, block: int) -> KernelDef:
+    def load(ctx, st):
+        gid = _gid(ctx)
+        x = st.glob["x"]
+        s = st.shared["s"].at[ctx.tid + 1].set(x[jnp.clip(gid, 0, n - 1)])
+        left = x[jnp.clip(gid - 1, 0, n - 1)]
+        right = x[jnp.clip(gid + 1, 0, n - 1)]
+        s = s.at[jnp.where(ctx.tid == 0, 0, OOB)].set(left, mode="drop")
+        s = s.at[jnp.where(ctx.tid == block - 1, block + 1, OOB)].set(
+            right, mode="drop")
+        return st.set_shared(s=s)
+
+    def compute(ctx, st):
+        gid = _gid(ctx)
+        s = st.shared["s"]
+        val = 0.25 * s[ctx.tid] + 0.5 * s[ctx.tid + 1] + 0.25 * s[ctx.tid + 2]
+        idx = jnp.where(gid < n, gid, OOB)
+        return st.set_glob(y=st.glob["y"].at[idx].set(val, mode="drop"))
+
+    return KernelDef(
+        "stencil1d", (load, compute), writes=("y",),
+        shared={"s": ((block + 2,), jnp.float32)}, est_block_work=block * 6.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# softmax_row: one block per row, two barriers (max then sum)
+# --------------------------------------------------------------------------
+def make_softmax_row(block: int) -> KernelDef:
+    def load(ctx, st):
+        v = st.glob["x"][ctx.bid, ctx.tid]
+        return st.set_shared(s=st.shared["s"].at[ctx.tid].set(v))
+
+    def exps(ctx, st):
+        s = st.shared["s"]
+        m = jnp.max(s)                       # every thread reads all of shared
+        p = jnp.exp(s[ctx.tid] - m)
+        return st.set_shared(p=st.shared["p"].at[ctx.tid].set(p))
+
+    def normalize(ctx, st):
+        p = st.shared["p"]
+        denom = jnp.sum(p)
+        y = st.glob["y"].at[ctx.bid, ctx.tid].set(p[ctx.tid] / denom)
+        return st.set_glob(y=y)
+
+    return KernelDef(
+        "softmax_row", (load, exps, normalize), writes=("y",),
+        shared={"s": ((block,), jnp.float32), "p": ((block,), jnp.float32)},
+        est_block_work=block * 10.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# scan_block: Hillis-Steele inclusive prefix sum (2 stages per level)
+# --------------------------------------------------------------------------
+def make_scan_block(block: int) -> KernelDef:
+    assert block & (block - 1) == 0
+
+    def load(ctx, st):
+        gid = _gid(ctx)
+        return st.set_shared(
+            s=st.shared["s"].at[ctx.tid].set(st.glob["x"][gid]))
+
+    def make_read(d):
+        def read(ctx, st):
+            s = st.shared["s"]
+            t = jnp.where(ctx.tid >= d, s[jnp.maximum(ctx.tid - d, 0)], 0.0)
+            return st.with_priv({"t": t})
+        return read
+
+    def make_write(d):
+        def write(ctx, st):
+            s = st.shared["s"]
+            return st.with_priv({}).set_shared(
+                s=s.at[ctx.tid].set(s[ctx.tid] + st.priv["t"]))
+        return write
+
+    def store(ctx, st):
+        gid = _gid(ctx)
+        return st.set_glob(
+            y=st.glob["y"].at[gid].set(st.shared["s"][ctx.tid]))
+
+    stages = [load]
+    d = 1
+    while d < block:
+        stages += [make_read(d), make_write(d)]
+        d *= 2
+    stages.append(store)
+    return KernelDef(
+        "scan_block", tuple(stages), writes=("y",),
+        shared={"s": ((block,), jnp.float32)},
+        est_block_work=block * math.log2(block) * 4.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# transpose_tiled: shared-staged transpose (coalescing demo, SVI-C)
+# --------------------------------------------------------------------------
+def make_transpose_tiled(h: int, w: int, tile: int = 8) -> KernelDef:
+    assert h % tile == 0 and w % tile == 0
+    ntx = w // tile
+
+    def load(ctx, st):
+        ty, tx = ctx.tid // tile, ctx.tid % tile
+        by, bx = ctx.bid // ntx, ctx.bid % ntx
+        t = st.shared["t"].at[ty, tx].set(
+            st.glob["x"][by * tile + ty, bx * tile + tx])
+        return st.set_shared(t=t)
+
+    def store(ctx, st):
+        ty, tx = ctx.tid // tile, ctx.tid % tile
+        by, bx = ctx.bid // ntx, ctx.bid % ntx
+        y = st.glob["y"].at[bx * tile + ty, by * tile + tx].set(
+            st.shared["t"][tx, ty])
+        return st.set_glob(y=y)
+
+    return KernelDef(
+        "transpose_tiled", (load, store), writes=("y",),
+        shared={"t": ((tile, tile), jnp.float32)},
+        est_block_work=tile * tile * 4.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Suite registry: kernel + launch config + inputs + numpy oracle
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SuiteEntry:
+    name: str
+    features: tuple[str, ...]
+    kernel: KernelDef
+    grid: int
+    block: int
+    dyn_shared: int | None
+    make_args: Callable[[np.random.Generator], dict]
+    reference: Callable[[dict], dict]
+
+
+def build_suite(scale: int = 1) -> list[SuiteEntry]:
+    """scale=1 -> test-sized; larger scales for the wall-clock benchmarks."""
+    entries = []
+    n = 4096 * scale
+    block = 128
+
+    entries.append(SuiteEntry(
+        "vecadd", ("spmd",), make_vecadd(n), -(-n // block), block, None,
+        lambda r: {"a": r.standard_normal(n, dtype=np.float32),
+                   "b": r.standard_normal(n, dtype=np.float32),
+                   "c": np.zeros(n, np.float32)},
+        lambda a: {"c": a["a"] + a["b"]},
+    ))
+
+    rn = 512
+    entries.append(SuiteEntry(
+        "reverse", ("barrier", "dyn_shared"), make_reverse(), 1, rn, rn,
+        lambda r: {"d": r.integers(0, 100, rn).astype(np.int32)},
+        lambda a: {"d": a["d"][::-1].copy()},
+    ))
+
+    nbins, tt = 64, 16 * block
+    hn = 4096 * scale
+    entries.append(SuiteEntry(
+        "histogram", ("atomic",), make_histogram(hn, nbins, tt), 16, block,
+        None,
+        lambda r: {"x": r.integers(0, nbins, hn).astype(np.int32),
+                   "hist": np.zeros(nbins, np.int32)},
+        lambda a: {"hist": np.bincount(a["x"], minlength=nbins)
+                   .astype(np.int32)},
+    ))
+
+    rs_n, rs_b = 2048 * scale, 256
+    entries.append(SuiteEntry(
+        "reduce_shared", ("barrier",), make_reduce_shared(rs_n, rs_b),
+        -(-rs_n // rs_b), rs_b, None,
+        lambda r: {"x": r.standard_normal(rs_n, dtype=np.float32),
+                   "out": np.zeros(-(-rs_n // rs_b), np.float32)},
+        lambda a: {"out": a["x"].reshape(-1, rs_b).sum(1)},
+    ))
+
+    entries.append(SuiteEntry(
+        "reduce_warp", ("warp",), make_reduce_warp(rs_n, rs_b),
+        -(-rs_n // rs_b), rs_b, None,
+        lambda r: {"x": r.standard_normal(rs_n, dtype=np.float32),
+                   "out": np.zeros(-(-rs_n // rs_b), np.float32)},
+        lambda a: {"out": a["x"].reshape(-1, rs_b).sum(1)},
+    ))
+
+    mm = 32 * max(1, scale // 4)
+    entries.append(SuiteEntry(
+        "matmul_tiled", ("barrier", "demotion"),
+        make_matmul_tiled(mm, mm, mm, tile=8), (mm // 8) ** 2, 64, None,
+        lambda r: {"a": r.standard_normal((mm, mm), dtype=np.float32),
+                   "b": r.standard_normal((mm, mm), dtype=np.float32),
+                   "c": np.zeros((mm, mm), np.float32)},
+        lambda a: {"c": a["a"] @ a["b"]},
+    ))
+
+    st_n = 4096 * scale
+    entries.append(SuiteEntry(
+        "stencil1d", ("barrier",), make_stencil1d(st_n, block),
+        -(-st_n // block), block, None,
+        lambda r: {"x": r.standard_normal(st_n, dtype=np.float32),
+                   "y": np.zeros(st_n, np.float32)},
+        lambda a: {"y": (0.25 * a["x"][np.clip(np.arange(st_n) - 1, 0, None)]
+                         + 0.5 * a["x"]
+                         + 0.25 * a["x"][np.clip(np.arange(st_n) + 1, None,
+                                                 st_n - 1)])},
+    ))
+
+    rows = 32 * scale
+    entries.append(SuiteEntry(
+        "softmax_row", ("barrier",), make_softmax_row(block), rows, block,
+        None,
+        lambda r: {"x": r.standard_normal((rows, block), dtype=np.float32),
+                   "y": np.zeros((rows, block), np.float32)},
+        lambda a: {"y": (np.exp(a["x"] - a["x"].max(1, keepdims=True))
+                         / np.exp(a["x"] - a["x"].max(1, keepdims=True))
+                         .sum(1, keepdims=True))},
+    ))
+
+    sc_b = 128
+    sc_n = sc_b * 8 * scale
+    entries.append(SuiteEntry(
+        "scan_block", ("barrier", "demotion"), make_scan_block(sc_b),
+        sc_n // sc_b, sc_b, None,
+        lambda r: {"x": r.standard_normal(sc_n, dtype=np.float32),
+                   "y": np.zeros(sc_n, np.float32)},
+        lambda a: {"y": np.cumsum(a["x"].reshape(-1, sc_b), 1).reshape(-1)},
+    ))
+
+    th, tw = 64, 64 * scale
+    entries.append(SuiteEntry(
+        "transpose_tiled", ("barrier",), make_transpose_tiled(th, tw),
+        (th // 8) * (tw // 8), 64, None,
+        lambda r: {"x": r.standard_normal((th, tw), dtype=np.float32),
+                   "y": np.zeros((tw, th), np.float32)},
+        lambda a: {"y": a["x"].T.copy()},
+    ))
+
+    return entries

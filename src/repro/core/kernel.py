@@ -1,0 +1,197 @@
+"""Kernel IR for CuPBoP-JAX.
+
+A CUDA-style SPMD kernel is represented *post-frontend* as a ``KernelDef``:
+an ordered tuple of **stages** separated by implicit ``__syncthreads()``
+barriers (the paper's loop-fission points, CuPBoP SIII-B.3), a declaration of
+__shared__ memory (SIII-B.1), and the set of global buffers the kernel writes
+(used by the stream runtime's implicit-barrier dependence analysis, SIII-C.1).
+
+Stage functions are written against a ``Ctx`` + ``BlockState`` and must be
+lowering-agnostic: the same stage body executes under
+
+* ``lower="loop"``   - the paper-faithful MCUDA/COX/CuPBoP loop lowering
+                       (explicit loop over thread chunks, register demotion
+                       across barriers, warp x lane nesting);
+* ``lower="vector"`` - the TPU-native lowering (thread axis vectorized onto
+                       VPU lanes, pure jnp);
+* ``lower="pallas"`` - vector semantics emitted inside ``pl.pallas_call``
+                       with grain-size block fetching (SIV-A).
+
+The contract that makes this possible: every thread-private value ("register")
+carries a leading *thread-chunk* axis. Under the loop lowering the chunk is 1
+(or 32 when warp-level functions are used - the paper's two-level nesting);
+under vector/pallas it is the whole block. Authors index shared/global arrays
+with ``arr[idx]`` / ``arr.at[idx].set(v)`` which is shape-polymorphic in the
+chunk size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+WARP_SIZE = 32
+
+
+class UnsupportedKernel(Exception):
+    """Raised when a lowering cannot express a kernel feature.
+
+    This is the analogue of an 'unsupport' cell in the paper's Table II."""
+
+
+class BlockState(NamedTuple):
+    """Functional view of one CUDA block's memory during a stage.
+
+    priv   : pytree of thread-private values; every leaf has leading axis
+             = thread-chunk size.  Values that live across a barrier are
+             demoted to ``[block_size, ...]`` arrays by the loop lowering
+             (CuPBoP register demotion).
+    shared : dict name -> array, the block's __shared__ memory (SIII-B.1).
+    glob   : dict name -> array, global-memory buffers (heap/HBM).
+    """
+
+    priv: Any
+    shared: dict
+    glob: dict
+
+    def with_priv(self, priv: Any) -> "BlockState":
+        return self._replace(priv=priv)
+
+    def set_shared(self, **kv: Any) -> "BlockState":
+        return self._replace(shared={**self.shared, **kv})
+
+    def set_glob(self, **kv: Any) -> "BlockState":
+        return self._replace(glob={**self.glob, **kv})
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-stage execution context: CUDA special registers + warp intrinsics.
+
+    ``bid``/``tid`` play the role of the paper's runtime-assigned variables
+    (block_index / thread id, SIII-B.2): they are *not* hardware registers on
+    the target, so CuPBoP materializes them explicitly - here they are traced
+    values fed by the lowering.
+    """
+
+    bid: Any                 # scalar int32 block id
+    tid: Any                 # [chunk] int32 thread ids within the block
+    block_dim: int           # python int (POCL-style JIT specialization)
+    grid_dim: Any            # int or traced scalar
+    backend: str             # 'loop' | 'vector' | 'pallas'
+    uses_warp: bool = False
+
+    @property
+    def lane(self):
+        return self.tid % WARP_SIZE
+
+    @property
+    def warp(self):
+        return self.tid // WARP_SIZE
+
+    # ---- warp-level functions (CuPBoP supports these via two-level loops;
+    #      DPC++/HIP-CPU coverage gaps in Table II come from their absence) --
+    def shfl(self, val, src_lane):
+        from repro.core import warp as _warp
+        return _warp.shfl(val, src_lane)
+
+    def shfl_up(self, val, delta):
+        from repro.core import warp as _warp
+        return _warp.shfl_up(val, delta)
+
+    def shfl_down(self, val, delta):
+        from repro.core import warp as _warp
+        return _warp.shfl_down(val, delta)
+
+    def shfl_xor(self, val, mask):
+        from repro.core import warp as _warp
+        return _warp.shfl_xor(val, mask)
+
+    def vote_all(self, pred):
+        from repro.core import warp as _warp
+        return _warp.vote_all(pred)
+
+    def vote_any(self, pred):
+        from repro.core import warp as _warp
+        return _warp.vote_any(pred)
+
+    def ballot(self, pred):
+        from repro.core import warp as _warp
+        return _warp.ballot(pred)
+
+    def warp_reduce(self, val, op="add"):
+        from repro.core import warp as _warp
+        return _warp.reduce(val, op)
+
+    # ---- atomics (TPU adaptation: deterministic scatter / grid-serial) -----
+    def atomic_add(self, arr, idx, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_add(arr, idx, val)
+
+    def atomic_max(self, arr, idx, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_max(arr, idx, val)
+
+    def atomic_cas_first(self, arr, idx, cmp, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_cas_first(arr, idx, cmp, val)
+
+
+Stage = Callable[[Ctx, BlockState], BlockState]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: hash by identity
+class KernelDef:
+    """A CUDA kernel after barrier fission.
+
+    ``stages`` are the code regions between consecutive ``__syncthreads()``
+    (Fig. 4 of the paper: Loop1 / Loop2).  ``shared`` declares __shared__
+    arrays; a dimension of ``-1`` is the paper's *extern* dynamic shared
+    memory, resolved by the ``dyn_shared`` launch parameter (Listing 3).
+    ``writes`` names the global buffers this kernel mutates - consumed by the
+    stream runtime for implicit-barrier insertion (Listing 4).
+    ``est_block_work`` is the per-block instruction estimate used by the
+    aggressive-grain heuristic (Table V '# inst' column).
+    """
+
+    name: str
+    stages: Sequence[Stage]
+    writes: Sequence[str]
+    shared: Mapping[str, tuple[tuple[int, ...], Any]] = dataclasses.field(
+        default_factory=dict
+    )
+    uses_warp: bool = False
+    est_block_work: float = 1e6
+
+    def resolved_shared(self, dyn_shared: int | None):
+        out = {}
+        for name, (shape, dtype) in self.shared.items():
+            if any(d == -1 for d in shape):
+                if dyn_shared is None:
+                    raise ValueError(
+                        f"kernel {self.name}: shared array {name} is extern "
+                        f"(dynamic); pass dyn_shared= at launch"
+                    )
+                shape = tuple(dyn_shared if d == -1 else d for d in shape)
+            out[name] = (tuple(int(d) for d in shape), dtype)
+        return out
+
+    def init_shared(self, dyn_shared: int | None):
+        return {
+            name: jnp.zeros(shape, dtype)
+            for name, (shape, dtype) in self.resolved_shared(dyn_shared).items()
+        }
+
+
+def check_priv_chunk(priv: Any, chunk: int, kernel_name: str, stage_idx: int):
+    """Enforce the thread-chunk leading-axis contract on priv leaves."""
+    for leaf in jax.tree_util.tree_leaves(priv):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) == 0 or shape[0] != chunk:
+            raise UnsupportedKernel(
+                f"kernel {kernel_name} stage {stage_idx}: thread-private leaf "
+                f"has shape {shape}, expected leading thread-chunk axis "
+                f"{chunk}. Broadcast scalars with jnp.full((chunk,), v)."
+            )

@@ -1,0 +1,59 @@
+"""TPU-native SPMD-to-MPMD **vector** lowering (DESIGN.md S2, beyond-paper).
+
+The whole thread block becomes one chunk: the thread axis is carried as the
+leading array axis of every private value and maps onto VPU lanes.  Barriers
+(stage boundaries) degenerate to program-order sequence points because array
+data-flow already serializes stage N before stage N+1 - this is exactly the
+vectorized thread loop that the paper's SVI-C identifies as the missing CPU
+optimization ("CuPBoP cannot fully utilize the SIMD instructions"); on TPU it
+is the *primary* lowering.
+
+Block scheduling is the same fetch x grain structure as the loop lowering so
+the Table-V grain-size experiments run identically under both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kernel import BlockState, Ctx, KernelDef, check_priv_chunk
+
+
+def _make_ctx(bid, block, grid):
+    return Ctx(
+        bid=bid,
+        tid=jnp.arange(block, dtype=jnp.int32),
+        block_dim=block,
+        grid_dim=grid,
+        backend="vector",
+        uses_warp=True,  # warp ops always expressible on the vector axis
+    )
+
+
+def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None):
+    shared = kernel.init_shared(dyn_shared)
+    st = BlockState(priv={}, shared=shared, glob=glob)
+    ctx = _make_ctx(bid, block, grid)
+    for si, stage in enumerate(kernel.stages):
+        st = stage(ctx, st)
+        check_priv_chunk(st.priv, block, kernel.name, si)
+    return st.glob
+
+
+def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None):
+    n_fetch = -(-grid // grain)
+
+    def run_bid(bid, g):
+        return run_block(kernel, bid, block=block, grid=grid, glob=g,
+                         dyn_shared=dyn_shared)
+
+    def fetch_body(f, g):
+        def grain_body(i, g_):
+            bid = f * grain + i
+            return lax.cond(bid < grid, lambda x: run_bid(bid, x),
+                            lambda x: x, g_)
+        return lax.fori_loop(0, grain, grain_body, g)
+
+    jax.eval_shape(lambda g: run_bid(jnp.int32(0), g), glob)
+    return lax.fori_loop(0, n_fetch, fetch_body, glob)

@@ -1,0 +1,51 @@
+"""CUDA memory-space mapping (paper SIII-B.1, Fig. 3/4).
+
+| CUDA space       | CuPBoP on CPU (paper)       | CuPBoP-JAX on TPU        |
+|------------------|-----------------------------|--------------------------|
+| global           | heap (malloc)               | HBM (device arrays)      |
+| shared           | stack / thread-local array  | VMEM                     |
+| local/registers  | registers / stack           | VREGs (traced values)    |
+| constant         | read-only globals           | SMEM / scalar prefetch   |
+| texture          | unsupported (Table II)      | unsupported (parity)     |
+
+``cuda_malloc``/``cuda_memcpy`` are the runtime-library replacements of
+Fig. 3: on the CPU/TPU backend they are plain allocation + device transfer,
+while the same user code linked against the CUDA runtime would hit the GPU.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Space(enum.Enum):
+    GLOBAL = "global"     # HBM
+    SHARED = "shared"     # VMEM
+    LOCAL = "local"       # registers
+    CONST = "const"       # SMEM / scalar
+    TEXTURE = "texture"   # unsupported, as in the paper
+
+
+class UnsupportedSpace(Exception):
+    pass
+
+
+def cuda_malloc(shape, dtype=jnp.float32, space: Space = Space.GLOBAL):
+    """cudaMalloc analogue: zero-filled device buffer in the given space."""
+    if space is Space.TEXTURE:
+        raise UnsupportedSpace(
+            "texture memory is unsupported (paper Table II: hybridsort/"
+            "kmeans/leukocyte/mummergpu fall out for every framework)"
+        )
+    return jnp.zeros(shape, dtype)
+
+
+def cuda_memcpy_h2d(host: np.ndarray):
+    return jax.device_put(np.asarray(host))
+
+
+def cuda_memcpy_d2h(dev) -> np.ndarray:
+    return np.asarray(jax.device_get(dev))

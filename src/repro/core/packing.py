@@ -1,0 +1,24 @@
+"""Parameter packing - the universal kernel-launch ABI (paper SIII-C.2).
+
+CuPBoP packs every kernel argument into one ``void**`` so a single
+task-queue entry type can launch any kernel; a host prologue packs and a
+kernel prologue unpacks (Listing 5).  The JAX analogue flattens the argument
+pytree to a leaf tuple (+ treedef): the leaf tuple is the ``void**``, the
+treedef the implicit type information the prologues encode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def pack(args: Any):
+    """Host prologue: pytree -> (leaves tuple 'void**', treedef)."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return tuple(leaves), treedef
+
+
+def unpack(packed, treedef):
+    """Kernel prologue: (leaves, treedef) -> original argument pytree."""
+    return jax.tree_util.tree_unflatten(treedef, list(packed))

@@ -1,0 +1,92 @@
+"""Emit a CuPBoP-JAX kernel as a ``pl.pallas_call`` (TPU target).
+
+Mapping (DESIGN.md S2):
+
+* CUDA block           -> one iteration of the grain loop inside a grid step;
+* task-queue fetch     -> one Pallas grid step (grid = ceil(nBlocks/grain));
+* thread axis          -> VPU lanes (vector lowering semantics);
+* __shared__ memory    -> VMEM-resident arrays (functional values; Mosaic
+                          allocates them in VMEM);
+* global memory        -> whole-array VMEM refs ("gather mode" - suits the
+                          irregular demo kernels; the structured hot-path
+                          kernels under ``repro/kernels`` use hand-written
+                          BlockSpec windows instead);
+* written buffers      -> outputs; grid steps on a TensorCore are sequential,
+                          so cross-block accumulation into the output ref is
+                          the TPU-legal atomicAdd adaptation.
+
+Validated with ``interpret=True`` on CPU; on a real TPU the same emission
+compiles via Mosaic (grid steps pipeline over cores with
+``dimension_semantics=('arbitrary',)`` because blocks may collide on output
+ranges, exactly like the paper's mutex-guarded queue serializes fetches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.kernel import BlockState, Ctx, KernelDef
+
+
+def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
+        interpret=True):
+    names = sorted(glob.keys())
+    written = [n for n in names if n in set(kernel.writes)]
+    read_only = [n for n in names if n not in set(kernel.writes)]
+    n_steps = -(-grid // grain)
+
+    def body(*refs):
+        in_refs = dict(zip(read_only + written, refs[: len(names)]))
+        out_refs = dict(zip(written, refs[len(names):]))
+        step = pl.program_id(0)
+
+        # first grid step: seed the output buffers from their inputs
+        @pl.when(step == 0)
+        def _seed():
+            for n in written:
+                out_refs[n][...] = in_refs[n][...]
+
+        g = {}
+        for n in read_only:
+            g[n] = in_refs[n][...]
+        for n in written:
+            g[n] = out_refs[n][...]
+
+        shared0 = kernel.init_shared(dyn_shared)
+        ctx_tid = jnp.arange(block, dtype=jnp.int32)
+
+        def run_bid(bid, g_):
+            ctx = Ctx(bid=bid, tid=ctx_tid, block_dim=block, grid_dim=grid,
+                      backend="pallas", uses_warp=True)
+            st = BlockState(priv={}, shared=shared0, glob=g_)
+            for stage in kernel.stages:
+                st = stage(ctx, st)
+            return st.glob
+
+        def grain_body(i, g_):
+            bid = step * grain + i
+            return lax.cond(bid < grid, lambda x: run_bid(bid, x),
+                            lambda x: x, g_)
+
+        g = lax.fori_loop(0, grain, grain_body, g)
+        for n in written:
+            out_refs[n][...] = g[n]
+
+    out_shape = [jax.ShapeDtypeStruct(glob[n].shape, glob[n].dtype)
+                 for n in written]
+    full_spec = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    call = pl.pallas_call(
+        body,
+        grid=(n_steps,),
+        in_specs=[full_spec(glob[n]) for n in read_only + written],
+        out_specs=[full_spec(glob[n]) for n in written],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    outs = call(*[glob[n] for n in read_only + written])
+    new_glob = dict(glob)
+    for n, o in zip(written, outs):
+        new_glob[n] = o
+    return new_glob

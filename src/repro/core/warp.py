@@ -1,0 +1,110 @@
+"""Warp-level functions (CUDA 9+ intrinsics) for both lowerings.
+
+CuPBoP supports warp shuffle / vote via the two-level nested-loop SPMD-to-MPMD
+transform of COX (paper SIII-B.3): the outer loop runs over warps, the inner
+over the 32 lanes of one warp.  In CuPBoP-JAX the inner 32 lanes are always a
+*vector* axis (the vectorization the paper lists as future work is native on
+the TPU VPU, whose lane groups are 128 wide / sublane 8), so every warp op is
+an operation along the trailing-of-leading lane axis.
+
+All functions take values with a leading thread-chunk axis whose size is a
+multiple of 32 (chunk == 32 under the loop lowering's warp mode; chunk ==
+block_size under vector/pallas), reshape it to [n_warps, 32, ...], and apply a
+lane-axis gather/permute/reduction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kernel import WARP_SIZE, UnsupportedKernel
+
+
+def _to_warps(val):
+    n = val.shape[0]
+    if n % WARP_SIZE != 0:
+        raise UnsupportedKernel(
+            f"warp op on chunk of {n} threads (not a multiple of {WARP_SIZE})"
+        )
+    return val.reshape((n // WARP_SIZE, WARP_SIZE) + val.shape[1:])
+
+
+def _flat(val):
+    return val.reshape((val.shape[0] * val.shape[1],) + val.shape[2:])
+
+
+def shfl(val, src_lane):
+    """__shfl_sync: every lane reads ``val`` from lane ``src_lane``.
+
+    ``src_lane`` may be a scalar or a per-thread array of lane ids.
+    """
+    w = _to_warps(val)
+    if jnp.ndim(src_lane) == 0:
+        out = jnp.broadcast_to(w[:, src_lane][:, None], w.shape)
+    else:
+        src = _to_warps(jnp.asarray(src_lane)) % WARP_SIZE
+        out = jnp.take_along_axis(
+            w, src.reshape(src.shape + (1,) * (w.ndim - 2)), axis=1
+        )
+        out = jnp.broadcast_to(out, w.shape)
+    return _flat(out)
+
+
+def _shfl_shift(val, delta, direction):
+    w = _to_warps(val)
+    lane = jnp.arange(WARP_SIZE)
+    src = lane + direction * delta
+    ok = (src >= 0) & (src < WARP_SIZE)
+    src_c = jnp.clip(src, 0, WARP_SIZE - 1)
+    gathered = jnp.take(w, src_c, axis=1)
+    # CUDA keeps the caller's own value when the source lane is out of range.
+    mask = ok.reshape((1, WARP_SIZE) + (1,) * (w.ndim - 2))
+    out = jnp.where(mask, gathered, w)
+    return _flat(out)
+
+
+def shfl_up(val, delta):
+    return _shfl_shift(val, delta, -1)
+
+
+def shfl_down(val, delta):
+    return _shfl_shift(val, delta, +1)
+
+
+def shfl_xor(val, mask):
+    w = _to_warps(val)
+    src = jnp.arange(WARP_SIZE) ^ mask
+    return _flat(jnp.take(w, src, axis=1))
+
+
+def vote_all(pred):
+    w = _to_warps(pred)
+    red = jnp.all(w, axis=1, keepdims=True)
+    return _flat(jnp.broadcast_to(red, w.shape))
+
+
+def vote_any(pred):
+    w = _to_warps(pred)
+    red = jnp.any(w, axis=1, keepdims=True)
+    return _flat(jnp.broadcast_to(red, w.shape))
+
+
+def ballot(pred):
+    """__ballot_sync: 32-bit mask of predicates, broadcast to every lane."""
+    w = _to_warps(pred).astype(jnp.uint32)
+    bits = w * (jnp.uint32(1) << jnp.arange(WARP_SIZE, dtype=jnp.uint32))
+    red = jnp.sum(bits, axis=1, keepdims=True).astype(jnp.uint32)
+    return _flat(jnp.broadcast_to(red, w.shape))
+
+
+_REDUCERS = {
+    "add": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+}
+
+
+def reduce(val, op="add"):
+    """Butterfly warp reduction (the classic __shfl_xor tree, collapsed)."""
+    w = _to_warps(val)
+    red = _REDUCERS[op](w, axis=1, keepdims=True)
+    return _flat(jnp.broadcast_to(red, w.shape))

@@ -1,0 +1,44 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``mode`` selects the execution path:
+  * "pallas"     - pl.pallas_call, interpret=False (real TPU)
+  * "interpret"  - pl.pallas_call, interpret=True  (CPU validation; default
+                   off-TPU, mirroring CuPBoP's Fig. 3 library switch)
+  * "ref"        - pure-jnp oracle (also what the dry-run lowers, so the
+                   roofline reads XLA HLO)
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rn
+
+
+def default_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def flash_attention(q, k, v, *, causal=True, mode=None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               interpret=(mode == "interpret"), **kw)
+
+
+def rmsnorm(x, scale, *, eps=1e-5, mode=None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.rmsnorm_ref(x, scale, eps)
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=(mode == "interpret"),
+                       **kw)
+
+
+def matmul(a, b, *, mode=None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.matmul_ref(a, b)
+    return _mm.matmul(a, b, interpret=(mode == "interpret"), **kw)

@@ -1,0 +1,389 @@
+"""Loop-aware HLO cost analysis (the dry-run's profiler).
+
+XLA's ``compiled.cost_analysis()`` visits a while-loop body **once**, so any
+scanned model (layers, flash-attention chunks, SSD chunks, MoE groups) is
+undercounted by the trip count.  This module re-derives FLOPs / HBM bytes /
+per-chip collective link-bytes by walking the *optimized post-SPMD* HLO text
+(``compiled.as_text()``):
+
+* computations are parsed into op lists with result shapes + operand symbol
+  tables;
+* the call graph is walked from ENTRY; ``while`` bodies (and conds) are
+  multiplied by the trip count recovered from the loop condition's
+  ``compare(counter, constant(N)), direction=LT`` pattern;
+* FLOPs: dots count 2*prod(result)*prod(contracting dims) (descending into
+  fusions); elementwise arithmetic counts 1/element; transcendentals 4;
+* bytes: operands+result of memory-touching top-level ops (fusion internals
+  are free, matching XLA's fusion cost model);
+* collectives: per-chip link bytes with ring formulas -
+  all-reduce 2x(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
+  collective-permute 1x - with n parsed from replica_groups.
+
+Validated against ``cost_analysis()`` on loop-free graphs (test_dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])")
+
+
+def _parse_op_line(line):
+    """'%x = TYPE opcode(rest' with balanced-paren tuple types (which may
+    contain /*index=N*/ comments and layout T(8,128) annotations)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):                  # tuple type: balance parens
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        tstr, rest = rest[: i + 1], rest[i + 1:]
+    else:                                     # scalar/array type up to space
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        tstr, rest = rest[:sp], rest[sp:]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    return name, tstr, om.group(1), rest[om.end():]
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "remainder",
+}
+TRANSCENDENTAL = {"exponential", "log", "rsqrt", "sqrt", "tanh", "power",
+                  "logistic", "sine", "cosine", "exponential-minus-one",
+                  "log-plus-one", "atan2", "erf", "cbrt"}
+MEMORY_OPS = {
+    "fusion", "dot", "convolution", "copy", "broadcast", "transpose",
+    "dynamic-slice", "dynamic-update-slice", "scatter", "gather", "reduce",
+    "pad", "concatenate", "slice", "iota", "reverse", "reduce-window",
+    "sort", "convert", "rng", "cholesky", "triangular-solve", "dot-general",
+} | ELEMENTWISE | TRANSCENDENTAL
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+SKIP_BYTES = {"parameter", "tuple", "get-tuple-element", "bitcast",
+              "constant", "while", "conditional", "call", "after-all",
+              "bitcast-convert", "reshape", "optimization-barrier",
+              "partition-id", "replica-id", "custom-call"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+def parse_computations(hlo: str):
+    comps: dict[str, list[Op]] = {}
+    symbols: dict[str, dict[str, str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        head_part = line.split(" -> ")[0] if " -> " in line else None
+        header = (re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*$",
+                           head_part)
+                  if head_part and line.rstrip().endswith("{") else None)
+        if header:
+            cur = header.group(2)
+            comps[cur] = []
+            symbols[cur] = {}
+            if header.group(1):
+                entry = cur
+            for pm in _PARAM_RE.finditer(header.group(3)):
+                symbols[cur][pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, tstr, opcode, rest = parsed
+            comps[cur].append(Op(name, tstr, opcode, rest))
+            symbols[cur][name] = tstr
+        if line.strip() == "}":
+            cur = None
+    return comps, symbols, entry
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    """Recover N from compare(counter, constant(N)) direction=LT."""
+    consts = {}
+    for op in cond_ops:
+        if op.opcode == "constant":
+            mm = re.match(r"(\d+)\)", op.rest)
+            if mm:
+                consts[op.name] = int(mm.group(1))
+    best = None
+    for op in cond_ops:
+        if "direction=LT" in op.rest:
+            for ref in re.findall(r"%([\w.\-]+)", op.rest):
+                if ref in consts:
+                    best = consts[ref]
+    if best is None and consts:
+        best = max(consts.values())
+    return best if best and best > 0 else 1
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0          # per-chip link bytes
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def __add__(self, o):
+        cc = defaultdict(float, self.coll_counts)
+        for k, v in o.coll_counts.items():
+            cc[k] += v
+        return Costs(self.flops + o.flops, self.bytes + o.bytes,
+                     self.coll_bytes + o.coll_bytes, cc)
+
+    def scale(self, f):
+        return Costs(self.flops * f, self.bytes * f, self.coll_bytes * f,
+                     defaultdict(float, {k: v * f
+                                         for k, v in self.coll_counts.items()}))
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _dot_flops(op: Op, table: dict[str, str]) -> float:
+    out_elems = _shape_elems(op.type_str)
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = re.findall(r"%([\w.\-]+)", op.rest.split("),")[0] + ")")
+    lhs = table.get(operands[0]) if operands else None
+    k = 1
+    if mm and lhs:
+        dims = _shape_dims(lhs)
+        for ci in mm.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str, num_partitions: int = 1) -> Costs:
+    comps, symbols, entry = parse_computations(hlo)
+    cache: dict[str, Costs] = {}
+
+    def comp_cost(name: str) -> Costs:
+        if name in cache:
+            return cache[name]
+        cache[name] = Costs()  # break recursion defensively
+        total = Costs()
+        table = symbols.get(name, {})
+        defs = {op.name: op for op in comps.get(name, [])}
+
+        def bf16_origin(op) -> bool:
+            """True if this collective's f32 operand is a hoisted convert of
+            bf16 data - an XLA-CPU artifact; the TPU collective is bf16."""
+            if not op.type_str.lstrip("(").startswith("f32"):
+                return False
+            refs = re.findall(r"%([\w.\-]+)", op.rest.split("),")[0])
+            for r in refs[:2]:
+                d = defs.get(r)
+                if d is None:
+                    continue
+                if d.opcode == "convert" or (
+                        d.opcode == "fusion" and "convert" in d.name):
+                    inner = re.findall(r"%([\w.\-]+)",
+                                       d.rest.split("),")[0])
+                    for ir in inner:
+                        if table.get(ir, "").startswith("bf16"):
+                            return True
+            return False
+
+        for op in comps.get(name, []):
+            oc = op.opcode
+            # --- flops ------------------------------------------------
+            if oc in ("dot", "dot-general"):
+                total.flops += _dot_flops(op, table)
+            elif oc in ELEMENTWISE:
+                total.flops += _shape_elems(op.type_str)
+            elif oc in TRANSCENDENTAL:
+                total.flops += 4 * _shape_elems(op.type_str)
+            elif oc == "reduce":
+                total.flops += _shape_elems(op.type_str)
+            # CPU-backend artifact: XLA-CPU lacks native bf16 matmuls and
+            # materializes f32 copies of bf16 operands as standalone
+            # convert/bitcast fusions.  On TPU (native bf16 MXU) these don't
+            # exist - exclude them from the TPU roofline (DESIGN.md S8).
+            if oc == "fusion":
+                parts = {p for p in re.sub(r"\.\d+$", "", op.name)
+                         .replace("_fusion", "").split("_")}
+                if parts <= {"convert", "bitcast", "wrapped", "copy"}:
+                    continue
+            # --- bytes ------------------------------------------------
+            if oc in MEMORY_OPS or oc in COLLECTIVES:
+                operand_part = op.rest.split("),")[0]
+                refs = [r for r in re.findall(r"%([\w.\-]+)", operand_part)
+                        if r in table]
+                is_dus = (oc == "dynamic-update-slice"
+                          or (oc == "fusion"
+                              and "dynamic-update-slice" in op.name))
+                is_ds = (oc == "dynamic-slice"
+                         or (oc == "fusion" and "dynamic-slice" in op.name
+                             and not is_dus))
+                if is_dus:
+                    # in-place update: read+write the slice, not the buffer
+                    ob = sorted(_shape_bytes(table[r]) for r in refs)
+                    b = 2 * sum(ob[:-1]) if len(ob) > 1 else \
+                        2 * _shape_bytes(op.type_str)
+                elif is_ds:
+                    b = 2 * _shape_bytes(op.type_str)
+                else:
+                    b = _shape_bytes(op.type_str)
+                    for ref in refs:
+                        b += _shape_bytes(table[ref])
+                total.bytes += b
+            # --- collectives -----------------------------------------
+            if oc in COLLECTIVES:
+                base = oc.replace("-start", "")
+                n = _group_size(op.rest, num_partitions)
+                sz = _shape_bytes(op.type_str)
+                if bf16_origin(op):
+                    sz *= 0.5
+                if base == "all-reduce":
+                    link = 2.0 * sz * (n - 1) / max(n, 1)
+                elif base == "all-gather":
+                    link = sz * (n - 1) / max(n, 1)
+                elif base == "reduce-scatter":
+                    link = sz * (n - 1)          # result is the scattered shard
+                elif base == "all-to-all":
+                    link = sz * (n - 1) / max(n, 1)
+                else:                            # collective-permute
+                    link = sz
+                total.coll_bytes += link
+                total.coll_counts[base] += 1
+            # --- control flow ----------------------------------------
+            if oc == "while":
+                mcond = re.search(r"condition=%([\w.\-]+)", op.rest)
+                mbody = re.search(r"body=%([\w.\-]+)", op.rest)
+                if mcond and mbody:
+                    trips = _trip_count(comps.get(mcond.group(1), []))
+                    total = total + comp_cost(mbody.group(1)).scale(trips) \
+                        + comp_cost(mcond.group(1)).scale(trips)
+            elif oc == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation=|false_computation=)%([\w.\-]+)",
+                    op.rest)
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if mbr:
+                    branches += re.findall(r"%([\w.\-]+)", mbr.group(1))
+                for br in branches:   # upper bound: all branches counted
+                    total = total + comp_cost(br)
+            elif oc in ("fusion", "call", "reduce", "scatter", "sort",
+                        "reduce-window", "select-and-scatter", "map"):
+                for mcalls in re.finditer(
+                        r"(?:calls=|to_apply=|called_computations=\{)%([\w.\-]+)",
+                        op.rest):
+                    inner = comp_cost(mcalls.group(1))
+                    # fusion internals are register/VMEM-resident: count
+                    # their flops and collectives, NOT their bytes (the
+                    # fusion node's operands+result were counted above)
+                    total = total + dataclasses.replace(
+                        inner, bytes=0.0 if oc != "call" else inner.bytes)
+        cache[name] = total
+        return total
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_cost(entry)
+
+
+def top_ops(hlo: str, n: int = 12, num_partitions: int = 1):
+    """Top ops by loop-scaled bytes - the dry-run 'profile' (SPerf loop)."""
+    comps, symbols, entry = parse_computations(hlo)
+    scale: dict[str, float] = defaultdict(float)
+
+    def walk(name, s):
+        scale[name] += s
+        for op in comps.get(name, []):
+            if op.opcode == "while":
+                mc = re.search(r"condition=%([\w.\-]+)", op.rest)
+                mb = re.search(r"body=%([\w.\-]+)", op.rest)
+                if mc and mb:
+                    t = _trip_count(comps.get(mc.group(1), []))
+                    walk(mb.group(1), s * t)
+                    walk(mc.group(1), s * t)
+
+    walk(entry, 1.0)
+    items = []
+    for cname, ops in comps.items():
+        s = scale.get(cname, 0)
+        if s == 0:
+            continue
+        table = symbols[cname]
+        for op in ops:
+            if op.opcode not in MEMORY_OPS and op.opcode not in COLLECTIVES:
+                continue
+            b = _shape_bytes(op.type_str)
+            for ref in re.findall(r"%([\w.\-]+)", op.rest.split("),")[0]):
+                if ref in table:
+                    b += _shape_bytes(table[ref])
+            items.append((b * s, s, op.opcode, op.name, op.type_str[:60]))
+    items.sort(reverse=True)
+    return items[:n]

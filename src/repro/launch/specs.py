@@ -1,0 +1,89 @@
+"""Input/cache/optimizer shardings + ShapeDtypeStruct stand-ins (dry-run).
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct, shardable
+ShapeDtypeStructs for every model input of an assigned (arch x shape) cell -
+no device allocation.  The VLM/audio modality frontends are STUBS per the
+assignment: patch/frame embeddings arrive as precomputed inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import SHAPES
+from repro.distributed.sharding import param_specs, resolve
+from repro.models import transformer as T
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Batch ShapeDtypeStructs for a cell. For decode cells this is the
+    (cache, tokens) pair of ``serve_step`` - one new token against a KV/state
+    cache of seq_len."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    tok = jnp.int32
+    if kind in ("train", "prefill"):
+        if cfg.num_codebooks > 1:
+            batch = {"tokens": jax.ShapeDtypeStruct(
+                (B, S, cfg.num_codebooks), tok)}
+        elif cfg.patch_prefix:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.patch_prefix),
+                                               tok),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.patch_prefix, cfg.d_model), cfg.cdtype),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        return batch
+    # decode: cache of seq_len + one token
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    tshape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, 1)
+    return {"cache": cache, "tokens": jax.ShapeDtypeStruct(tshape, tok)}
+
+
+_CACHE_LOGICAL = {
+    "k":       (None, "batch", "kv_seq", "heads", None),
+    "v":       (None, "batch", "kv_seq", "heads", None),
+    "conv":    (None, "batch", None, "tp"),
+    "ssm":     (None, "batch", None, "heads", None, None),
+    "wkv":     (None, "batch", "heads", None, None),
+    "last_tm": (None, "batch", None, None),
+    "last_cm": (None, "batch", None, None),
+    "pos":     (),
+}
+
+
+def cache_sharding(cache_struct, mesh):
+    def one(path, leaf):
+        key = str(getattr(path[-1], "key", ""))
+        logical = _CACHE_LOGICAL.get(key, (None,) * len(leaf.shape))
+        logical = tuple(logical[: len(leaf.shape)]) + (None,) * (
+            len(leaf.shape) - len(logical))
+        return NamedSharding(mesh, resolve(mesh, leaf.shape, logical))
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def batch_sharding(batch_struct, mesh):
+    def one(leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, resolve(mesh, leaf.shape, logical))
+    return jax.tree.map(one, batch_struct)
+
+
+def train_shardings(cfg: ModelConfig, mesh, batch_struct):
+    """(params, opt_state, batch) shardings for train_step."""
+    from repro.optim import adamw
+    pstruct = T.abstract_params(cfg)
+    pspec = param_specs(pstruct, mesh)
+    ostruct = jax.eval_shape(
+        lambda p: adamw.init_state(
+            adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype), p), pstruct)
+    ospec = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=param_specs(ostruct.m, mesh),
+        v=param_specs(ostruct.v, mesh))
+    return pstruct, ostruct, pspec, ospec, batch_sharding(batch_struct, mesh)

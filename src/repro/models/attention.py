@@ -1,0 +1,335 @@
+"""GQA attention: padded-TP projections + chunked flash (XLA path) + decode.
+
+The chunked flash forward is the pure-JAX oracle of the Pallas kernel in
+``repro/kernels/flash_attention.py`` and the implementation used for training
+and the dry-run (DESIGN.md: kernels are TPU-targeted; the XLA path provides
+the HLO the roofline reads).  Memory is bounded by (q_chunk x kv_chunk)
+score tiles via a two-level ``lax.scan`` with running max/denominator -
+the paper's SVI-C "memory access reordering" insight applied to attention:
+iterate KV in blocks that fit fast memory instead of materializing the
+GPU-friendly [S, S] score matrix.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense, rope, uniform_init
+from repro.models.padding import PadPlan, gqa_pad_plan
+
+
+def plan_for(cfg: ModelConfig) -> PadPlan:
+    return gqa_pad_plan(cfg.num_heads, cfg.num_kv_heads, cfg.tp_align)
+
+
+def init_attn_params(key, cfg: ModelConfig, plan: PadPlan | None = None):
+    plan = plan or plan_for(cfg)
+    D, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": uniform_init(ks[0], (D, plan.hq_p * hd), 1.0, cfg.pdtype),
+        "wk": uniform_init(ks[1], (D, plan.hkv_p * hd), 1.0, cfg.pdtype),
+        "wv": uniform_init(ks[2], (D, plan.hkv_p * hd), 1.0, cfg.pdtype),
+        "wo": uniform_init(ks[3], (plan.hq_p * hd, D), 1.0, cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((plan.hq_p * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((plan.hkv_p * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((plan.hkv_p * hd,), cfg.pdtype)
+    # zero the dummy slots so padding is exactly inert
+    if not plan.is_identity:
+        import numpy as np
+        qm = np.asarray(plan.qmap) < 0
+        kvm = np.asarray(plan.kvmap) < 0
+        if qm.any():
+            z = np.ones((plan.hq_p, hd), np.float32)
+            z[qm] = 0.0
+            p["wq"] = p["wq"] * z.reshape(-1)
+            p["wo"] = p["wo"] * z.reshape(-1, 1)
+        if kvm.any():
+            z = np.ones((plan.hkv_p, hd), np.float32)
+            z[kvm] = 0.0
+            p["wk"] = p["wk"] * z.reshape(-1)
+            p["wv"] = p["wv"] * z.reshape(-1)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, plan: PadPlan, p, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(x, p["wq"], p.get("bq"), cfg.cdtype).reshape(B, S, plan.hq_p, hd)
+    k = dense(x, p["wk"], p.get("bk"), cfg.cdtype).reshape(B, S, plan.hkv_p, hd)
+    v = dense(x, p["wv"], p.get("bv"), cfg.cdtype).reshape(B, S, plan.hkv_p, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal=True, q_chunk=512, kv_chunk=1024,
+                    q_offset=0, kv_len=None):
+    """Chunked online-softmax attention.
+
+    q: [B, Sq, Hkv, g, hd] (grouped GQA), k/v: [B, Skv, Hkv, hd].
+    Returns [B, Sq, Hkv, g, hd].  ``q_offset`` is the absolute position of
+    q[0] (prefill continuation); ``kv_len`` masks a partially-filled cache.
+    """
+    B, Sq, Hkv, g, hd = q.shape
+    Skv = k.shape[1]
+    qc = q_chunk if Sq % q_chunk == 0 else Sq
+    kc = kv_chunk if Skv % kv_chunk == 0 else Skv
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, Hkv, g, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, hd), 1, 0)
+
+    def q_step(_, qi_q):
+        qi, qck = qi_q
+        gq = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kck, vck = ki_kv
+            gk = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qck, kck,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= gq[:, None] >= gk[None, :]
+            if kv_len is not None:
+                mask &= (gk < kv_len)[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(pexp, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", pexp.astype(vck.dtype), vck,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 3, 1)  # [B, qc, Hkv, g, hd]
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, g, hd)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd_lse(q, k, v, *, causal, q_chunk, kv_chunk):
+    """Same as flash_attention but also returns the logsumexp [B,Hkv,g,Sq]."""
+    B, Sq, Hkv, g, hd = q.shape
+    Skv = k.shape[1]
+    qc = q_chunk if Sq % q_chunk == 0 else Sq
+    kc = kv_chunk if Skv % kv_chunk == 0 else Skv
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(hd)
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, Hkv, g, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, hd), 1, 0)
+
+    def q_step(_, qi_q):
+        qi, qck = qi_q
+        gq = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kck, vck = ki_kv
+            gk = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qck, kck,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                s = jnp.where((gq[:, None] >= gk[None, :])[None, None, None],
+                              s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(pexp, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", pexp.astype(vck.dtype), vck,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, Hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (jnp.moveaxis(out, 3, 1), lse)
+
+    _, (outs, lses) = lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, g, hd).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, g, Sq)
+    return out, lse
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_trainable(causal, q_chunk, kv_chunk):
+    """Flash attention with the chunked flash *backward* (custom VJP).
+
+    Without this, the scan-based forward saves O(S^2 / chunk) probability
+    tiles for autodiff - the 48 GB/chip blow-up the first dry-run caught.
+    The bwd recomputes p tile-by-tile from the saved logsumexp (two passes:
+    q-major for dq, kv-major for dk/dv), bounding residuals to O(B*S*H*d).
+    """
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = _flash_fwd_lse(q, k, v, causal=causal, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_lse(q, k, v, causal=causal, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Sq, Hkv, g, hd = q.shape
+        Skv = k.shape[1]
+        qc = q_chunk if Sq % q_chunk == 0 else Sq
+        kc = kv_chunk if Skv % kv_chunk == 0 else Skv
+        nq, nk = Sq // qc, Skv // kc
+        scale = 1.0 / math.sqrt(hd)
+        dout = dout.astype(jnp.float32)
+        # D_i = rowsum(dout * out)
+        Dmat = jnp.einsum("bqhgd,bqhgd->bhgq", dout,
+                          out.astype(jnp.float32))
+
+        def chunks(a, n, c):
+            return jnp.moveaxis(a.reshape(B, n, c, *a.shape[2:]), 1, 0)
+
+        qs, dos = chunks(q, nq, qc), chunks(dout, nq, qc)
+        ks, vs = chunks(k, nk, kc), chunks(v, nk, kc)
+        lses = jnp.moveaxis(lse.reshape(B, Hkv, g, nq, qc), 3, 0)
+        Ds = jnp.moveaxis(Dmat.reshape(B, Hkv, g, nq, qc), 3, 0)
+
+        def p_tile(qck, kck, lse_i, qi, ki):
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qck, kck,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                gq = qi * qc + jnp.arange(qc)
+                gk = ki * kc + jnp.arange(kc)
+                s = jnp.where((gq[:, None] >= gk[None, :])[None, None, None],
+                              s, -1e30)
+            return jnp.exp(s - lse_i[..., None])        # [B,Hkv,g,qc,kc]
+
+        # pass 1: dq (outer q, inner kv)
+        def dq_step(_, inp):
+            qi, qck, do_i, lse_i, D_i = inp
+
+            def inner(dq_i, inp2):
+                ki, kck, vck = inp2
+                p = p_tile(qck, kck, lse_i, qi, ki)
+                dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i,
+                                vck.astype(jnp.float32))
+                ds = p * (dp - D_i[..., None])
+                dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                         kck.astype(jnp.float32)) * scale
+                return dq_i, None
+
+            dq0 = jnp.zeros((B, qc, Hkv, g, hd), jnp.float32)
+            dq_i, _ = lax.scan(inner, dq0, (jnp.arange(nk), ks, vs))
+            return None, dq_i
+
+        _, dqs = lax.scan(dq_step, None, (jnp.arange(nq), qs, dos, lses, Ds))
+        dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, Hkv, g, hd)
+
+        # pass 2: dk/dv (outer kv, inner q)
+        def dkv_step(_, inp):
+            ki, kck, vck = inp
+
+            def inner(carry, inp2):
+                dk_j, dv_j = carry
+                qi, qck, do_i, lse_i, D_i = inp2
+                p = p_tile(qck, kck, lse_i, qi, ki)
+                dv_j = dv_j + jnp.einsum("bhgqk,bqhgd->bkhd", p, do_i)
+                dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i,
+                                vck.astype(jnp.float32))
+                ds = p * (dp - D_i[..., None])
+                dk_j = dk_j + jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                                         qck.astype(jnp.float32)) * scale
+                return (dk_j, dv_j), None
+
+            z = jnp.zeros((B, kc, Hkv, hd), jnp.float32)
+            (dk_j, dv_j), _ = lax.scan(inner, (z, z),
+                                       (jnp.arange(nq), qs, dos, lses, Ds))
+            return None, (dk_j, dv_j)
+
+        _, (dks, dvs) = lax.scan(dkv_step, None, (jnp.arange(nk), ks, vs))
+        dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, Hkv, hd)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, Hkv, hd)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention_trainable(q, k, v, *, causal=True, q_chunk=512,
+                              kv_chunk=1024):
+    return _make_flash_trainable(causal, q_chunk, kv_chunk)(q, k, v)
+
+
+def attend_full(cfg: ModelConfig, plan: PadPlan, p, x, positions):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v)).
+
+    Strictly causal over the whole sequence - for the VLM arch the patch-
+    embedding prefix participates causally (LLaVA/InternVL decoder style).
+    """
+    B, S, D = x.shape
+    hd = cfg.hd
+    q, k, v = _project_qkv(cfg, plan, p, x, positions)
+    qg = q.reshape(B, S, plan.hkv_p, plan.group_p, hd)
+    out = flash_attention_trainable(qg, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk)
+    out = out.reshape(B, S, plan.hq_p, hd)
+    mask = jnp.asarray(plan.head_mask, out.dtype)
+    out = out * mask[None, None, :, None]
+    y = dense(out.reshape(B, S, plan.hq_p * hd), p["wo"],
+              compute_dtype=cfg.cdtype)
+    return constrain(y, "batch", "seq", None), (k, v)
+
+
+def attend_decode(cfg: ModelConfig, plan: PadPlan, p, x1, k_cache, v_cache,
+                  pos):
+    """One-token decode against a cache. Returns (out, k_new1, v_new1).
+
+    x1: [B, 1, D]; caches [B, Smax, Hkv_p, hd]; pos: scalar current length.
+    """
+    B = x1.shape[0]
+    hd = cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k1, v1 = _project_qkv(cfg, plan, p, x1, positions)
+    qg = q.reshape(B, 1, plan.hkv_p, plan.group_p, hd)
+    k_cache = lax.dynamic_update_slice_in_dim(
+        k_cache, k1.astype(k_cache.dtype), pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        v_cache, v1.astype(v_cache.dtype), pos, axis=1)
+    out = flash_attention(qg, k_cache, v_cache, causal=False,
+                          q_chunk=1, kv_chunk=k_cache.shape[1],
+                          q_offset=0, kv_len=pos + 1)
+    out = out.reshape(B, 1, plan.hq_p, hd)
+    mask = jnp.asarray(plan.head_mask, out.dtype)
+    out = out * mask[None, None, :, None]
+    y = dense(out.reshape(B, 1, plan.hq_p * hd), p["wo"],
+              compute_dtype=cfg.cdtype)
+    return y, k_cache, v_cache

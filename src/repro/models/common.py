@@ -1,0 +1,61 @@
+"""Shared model primitives (pure JAX, scan/remat-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope(x, positions, theta=1e4):
+    """NeoX-style rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32)[..., None, :] * freqs
+    # ang: [..., S, 1, half] broadcasting over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], -1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, targets, mask=None, real_vocab=None):
+    """Mean next-token CE. logits [..., Vp] f32; padded vocab is masked."""
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if real_vocab is not None and real_vocab < vp:
+        neg = jnp.full((vp - real_vocab,), -1e9, logits.dtype)
+        logits = logits.at[..., real_vocab:].add(neg)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def dense(x, w, b=None, compute_dtype=None):
+    dt = compute_dtype or x.dtype
+    y = jnp.einsum("...d,df->...f", x.astype(dt), w.astype(dt))
+    if b is not None:
+        y = y + b.astype(dt)
+    return y
+
+
+def uniform_init(key, shape, scale, dtype):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    bound = scale / (fan_in ** 0.5)
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound
+                              ).astype(dtype)

@@ -1,0 +1,175 @@
+"""Mamba2 block via the chunked SSD algorithm (zamba2 substrate).
+
+Training/prefill use the chunkwise-parallel state-space dual form: intra-chunk
+contributions are a masked [chunk x chunk] matmul (MXU-friendly), inter-chunk
+state is carried by a ``lax.scan`` - sub-quadratic in sequence length, which
+is what qualifies the hybrid/ssm archs for the ``long_500k`` shape.  Decode is
+the O(1)-per-token recurrence over (conv_state, ssm_state).
+
+Memory discipline: everything chunk-local lives inside the scan body (peak
+activation ~ B*c*c*H floats, c = cfg.ssm.chunk), and the group->head
+broadcast happens inside einsums rather than a materialized ``repeat``.
+State layout: [B, G, Hg, N, P] with H = G * Hg heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense, rmsnorm, silu, uniform_init
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + H
+    return d_inner, H, conv_ch, proj
+
+
+def state_shapes(cfg: ModelConfig, batch):
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = dims(cfg)
+    G, Hg = s.ngroups, H // s.ngroups
+    return ((batch, s.conv_dim - 1, conv_ch),
+            (batch, G, Hg, s.state_dim, s.head_dim))
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_ch, proj = dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": uniform_init(ks[0], (D, proj), 1.0, cfg.pdtype),
+        "conv_w": uniform_init(ks[1], (s.conv_dim, conv_ch), 1.0, jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": uniform_init(ks[2], (d_inner, D), 1.0, cfg.pdtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, H, conv_ch, _ = dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def _conv_full(p, xBC, conv_dim):
+    """Causal depthwise conv via explicit shifts (kernel is tiny)."""
+    out = xBC * p["conv_w"][-1]
+    for i in range(1, conv_dim):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :xBC.shape[1]]
+        out = out + shifted * p["conv_w"][-1 - i]
+    return silu(out + p["conv_b"])
+
+
+def _grouped(cfg, xBC, dt_raw, p):
+    """Split conv output into x heads [B,S,G,Hg,P], B/C [B,S,G,N], dt [B,S,G,Hg]."""
+    s = cfg.ssm
+    d_inner, H, _, _ = dims(cfg)
+    G, Hg = s.ngroups, H // s.ngroups
+    B_, S_, _ = xBC.shape
+    gn = G * s.state_dim
+    xs = xBC[..., :d_inner].reshape(B_, S_, G, Hg, s.head_dim)
+    Bm = xBC[..., d_inner: d_inner + gn].reshape(B_, S_, G, s.state_dim)
+    Cm = xBC[..., d_inner + gn:].reshape(B_, S_, G, s.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    dt = dt.reshape(B_, S_, G, Hg)
+    return xs, Bm, Cm, dt
+
+
+def mamba_full(cfg: ModelConfig, p, x, state=None):
+    """Train/prefill forward. x: [B,S,D] -> (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = dims(cfg)
+    G, Hg = s.ngroups, H // s.ngroups
+    B_, S_, D = x.shape
+    c = s.chunk if S_ % s.chunk == 0 else S_
+    nc = S_ // c
+
+    zxbcdt = dense(x, p["in_proj"], compute_dtype=cfg.cdtype)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC_in = xBC.astype(jnp.float32)
+    xBC = _conv_full(p, xBC_in, s.conv_dim)
+    xs, Bm, Cm, dt = _grouped(cfg, xBC, dt_raw, p)
+    A = -jnp.exp(p["A_log"]).reshape(G, Hg)
+    dA = dt * A                                                  # [B,S,G,Hg]
+
+    def by_chunk(a):
+        return jnp.moveaxis(a.reshape((B_, nc, c) + a.shape[2:]), 1, 0)
+
+    xs_c = by_chunk(xs.astype(jnp.float32))
+    B_c = by_chunk(Bm.astype(jnp.float32))
+    C_c = by_chunk(Cm.astype(jnp.float32))
+    dt_c = by_chunk(dt)
+    cum_c = jnp.cumsum(by_chunk(dA), axis=2)                     # [n,B,c,G,Hg]
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    S0 = (jnp.zeros((B_, G, Hg, s.state_dim, s.head_dim), jnp.float32)
+          if state is None else state.astype(jnp.float32))
+
+    def chunk_step(Sprev, inp):
+        xn, Bn, Cn, dtn, cumn = inp                 # [B,c,...]
+        # intra: Y[t] = sum_{i<=t} exp(cum_t - cum_i) (C_t.B_i) dt_i x_i
+        L = jnp.exp(cumn[:, :, None] - cumn[:, None])            # [B,t,i,G,Hg]
+        L = jnp.where(tril[None, :, :, None, None], L, 0.0)
+        CB = jnp.einsum("btgN,bigN->btig", Cn, Bn)               # [B,t,i,G]
+        W = CB[..., None] * L * dtn[:, None]                     # [B,t,i,G,Hg]
+        y_intra = jnp.einsum("btigh,bighp->btghp", W, xn)
+        # inter: Y[t] += exp(cum_t) C_t . S_prev
+        y_inter = jnp.einsum("btgN,bghNp->btghp", Cn, Sprev) \
+            * jnp.exp(cumn)[..., None]
+        # state update
+        dte = jnp.exp(cumn[:, -1:] - cumn)                       # [B,c,G,Hg]
+        Sc = jnp.einsum("bigh,bigN,bighp->bghNp", dtn * dte, Bn, xn)
+        S_new = jnp.exp(cumn[:, -1])[..., None, None] * Sprev + Sc
+        return S_new, y_intra + y_inter
+
+    S_final, y = lax.scan(chunk_step, S0, (xs_c, B_c, C_c, dt_c, cum_c))
+    y = jnp.moveaxis(y, 0, 1)                                    # [B,n,c,G,Hg,P]
+    y = y + p["D_skip"].reshape(G, Hg)[None, None, None, :, :, None] \
+        * jnp.moveaxis(xs_c, 0, 1)
+    y = y.reshape(B_, S_, d_inner)
+    y = y * silu(z.astype(jnp.float32))
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = dense(y.astype(cfg.cdtype), p["out_proj"], compute_dtype=cfg.cdtype)
+
+    conv_state = xBC_in[:, -(s.conv_dim - 1):, :]
+    return constrain(out, "batch", "seq", None), (conv_state, S_final)
+
+
+def mamba_step(cfg: ModelConfig, p, x1, conv_state, ssm_state):
+    """Decode one token. x1: [B,1,D] -> (y1, conv_state, ssm_state)."""
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = dims(cfg)
+    G, Hg = s.ngroups, H // s.ngroups
+    B_ = x1.shape[0]
+    zxbcdt = dense(x1, p["in_proj"], compute_dtype=cfg.cdtype)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state, xBC.astype(jnp.float32)], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC1 = silu(conv)[:, None, :]
+    xs, Bm, Cm, dt = _grouped(cfg, xBC1, dt_raw, p)
+    A = -jnp.exp(p["A_log"]).reshape(G, Hg)
+    dA1 = jnp.exp(dt[:, 0] * A)                                  # [B,G,Hg]
+    xf = xs[:, 0]                                                # [B,G,Hg,P]
+    Bf, Cf = Bm[:, 0], Cm[:, 0]                                  # [B,G,N]
+    ssm_state = (dA1[..., None, None] * ssm_state
+                 + jnp.einsum("bgh,bgN,bghp->bghNp", dt[:, 0], Bf, xf))
+    y = jnp.einsum("bgN,bghNp->bghp", Cf, ssm_state) \
+        + p["D_skip"].reshape(G, Hg)[None, :, :, None] * xf
+    y = y.reshape(B_, 1, d_inner)
+    y = y * silu(z.astype(jnp.float32))
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = dense(y.astype(cfg.cdtype), p["out_proj"], compute_dtype=cfg.cdtype)
+    return out, window[:, 1:], ssm_state

@@ -1,0 +1,26 @@
+"""SwiGLU MLP block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense, silu, uniform_init
+
+
+def init_mlp_params(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": uniform_init(ks[0], (d_model, d_ff), 1.0, dtype),
+        "w_up": uniform_init(ks[1], (d_model, d_ff), 1.0, dtype),
+        "w_down": uniform_init(ks[2], (d_ff, d_model), 1.0, dtype),
+    }
+
+
+def mlp_block(cfg: ModelConfig, p, x):
+    h = silu(dense(x, p["w_gate"], compute_dtype=cfg.cdtype)) * dense(
+        x, p["w_up"], compute_dtype=cfg.cdtype)
+    h = constrain(h, "batch", "seq", "tp")
+    y = dense(h, p["w_down"], compute_dtype=cfg.cdtype)
+    return constrain(y, "batch", "seq", None)

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts: GShard-style capacity dispatch (TPU-idiomatic).
+
+Two dispatch algorithms (cfg.moe.dispatch):
+
+* "einsum" - the GShard/Switch one-hot [G, gs, E, C] dispatch/combine
+  einsums: the paper-era TPU baseline;
+* "sort"   - argsort + gather/scatter (optimization O3, EXPERIMENTS.md
+  SPerf): data movement O(tokens x D), no one-hot matmul flops.
+
+Groups are token-major with the group axis sharded over the data axis
+(optimization O3b): all groups are processed in one batched computation so
+per-chip work is 1/dp of the total - the earlier scan-over-groups form
+replayed every group on every chip.
+
+Sharding: deepseek (64e) shards the expert axis over 'model' (64 % 16 == 0);
+grok (8e) cannot (8 % 16 != 0), so experts replicate across 'model' and each
+expert's FFN is TP-sharded instead - both fall out of the
+divisibility-aware ``constrain`` with no code change.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense, silu, uniform_init
+from repro.models.mlp import init_mlp_params, mlp_block
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    m = cfg.moe
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": uniform_init(ks[0], (D, m.num_experts), 1.0, jnp.float32),
+        "experts": {
+            "w_gate": uniform_init(ks[1], (m.num_experts, D, m.expert_d_ff),
+                                   1.0, cfg.pdtype),
+            "w_up": uniform_init(ks[2], (m.num_experts, D, m.expert_d_ff),
+                                 1.0, cfg.pdtype),
+            "w_down": uniform_init(ks[3], (m.num_experts, m.expert_d_ff, D),
+                                   1.0, cfg.pdtype),
+        },
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp_params(ks[4], D, m.shared_d_ff * m.num_shared,
+                                      cfg.pdtype)
+    return p
+
+
+def _capacity(group, top_k, num_experts, factor):
+    c = int(group * top_k / num_experts * factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: [G, E, C, D] -> [G, E, C, D] through every expert's SwiGLU."""
+    xe = constrain(xe, "batch", "expert", None, None)
+    h = silu(jnp.einsum("gecd,edf->gecf", xe, p["experts"]["w_gate"]
+                        .astype(cfg.cdtype))) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["experts"]["w_up"]
+                   .astype(cfg.cdtype))
+    h = constrain(h, "batch", "expert", None, "tp")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w_down"]
+                    .astype(cfg.cdtype))
+    return constrain(ye, "batch", "expert", None, None)
+
+
+def _route(cfg, p, xt):
+    """xt: [G, gs, D] -> (top_w, top_idx [G, gs, k], aux)."""
+    m = cfg.moe
+    logits = dense(xt, p["router"], compute_dtype=jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                  # [G, gs, E]
+    top_w, top_idx = lax.top_k(gates, m.top_k)               # [G, gs, k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    f = jnp.mean(jax.nn.one_hot(top_idx[..., 0], m.num_experts),
+                 axis=(0, 1))
+    aux = m.num_experts * jnp.sum(f * jnp.mean(gates, axis=(0, 1)))
+    return top_w, top_idx, aux
+
+
+def _einsum_moe(cfg, p, xt, C):
+    """GShard one-hot dispatch over [G, gs, E, C] (baseline)."""
+    m = cfg.moe
+    G, gs, D = xt.shape
+    top_w, top_idx, aux = _route(cfg, p, xt)
+    running = jnp.zeros((G, 1, m.num_experts), jnp.int32)
+    dispatch = jnp.zeros((G, gs, m.num_experts, C), xt.dtype)
+    combine = jnp.zeros((G, gs, m.num_experts, C), jnp.float32)
+    for j in range(m.top_k):
+        oh = jax.nn.one_hot(top_idx[..., j], m.num_experts,
+                            dtype=jnp.int32)                 # [G, gs, E]
+        pos = running + jnp.cumsum(oh, axis=1) - oh
+        keep = (pos < C) & (oh > 0)
+        slot = jax.nn.one_hot(pos, C, dtype=xt.dtype) * keep[..., None]
+        dispatch = dispatch + slot
+        combine = combine + top_w[..., j, None, None] * slot.astype(
+            jnp.float32)
+        running = running + jnp.sum(oh, axis=1, keepdims=True)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)          # [G, E, C, D]
+    ye = _expert_ffn(cfg, p, xe)
+    yt = jnp.einsum("gtec,gecd->gtd", combine.astype(cfg.cdtype),
+                    ye.astype(cfg.cdtype))
+    return yt, aux
+
+
+def _sort_moe(cfg, p, xt, C):
+    """Sort-based dispatch (optimization O3): one flat gather/scatter."""
+    m = cfg.moe
+    G, gs, D = xt.shape
+    E, k = m.num_experts, m.top_k
+    top_w, top_idx, aux = _route(cfg, p, xt)
+    flat_e = top_idx.reshape(G, gs * k)
+    flat_w = top_w.reshape(G, gs * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(gs), k)[None], (G, gs * k))
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+    stok = jnp.take_along_axis(flat_tok, order, 1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, 1) - counts                  # [G, E]
+    pos = jnp.arange(gs * k)[None] - jnp.take_along_axis(starts, se, 1)
+    keep = pos < C
+    # per-group destination se*C + pos in [E*C]; G axis kept so the group
+    # sharding survives the scatter (flattening G lost it - see SPerf log)
+    slot = jnp.where(keep, se * C + pos, E * C)              # OOB drops
+    gidx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, gs * k))
+    gathered = jnp.take_along_axis(xt, stok[..., None], 1)   # [G, gs*k, D]
+    xe = jnp.zeros((G, E * C, D), xt.dtype).at[gidx, slot].set(
+        gathered, mode="drop").reshape(G, E, C, D)
+    ye = _expert_ffn(cfg, p, xe).reshape(G, E * C, D)
+    contrib = jnp.take_along_axis(
+        ye, jnp.minimum(slot, E * C - 1)[..., None], 1) * (
+        sw * keep).astype(cfg.cdtype)[..., None]             # [G, gs*k, D]
+    yt = jnp.zeros((G, gs, D), cfg.cdtype)
+    yt = yt.at[gidx, stok].add(contrib)
+    return yt, aux
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """x: [B, S, D] -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    gs = min(m.group_size, T)
+    while T % gs:
+        gs //= 2
+    G = T // gs
+    C = _capacity(gs, m.top_k, m.num_experts, m.capacity_factor)
+    xt = constrain(x.reshape(G, gs, D), "batch", None, None)
+    fn = _sort_moe if m.dispatch == "sort" else _einsum_moe
+    yt, aux = fn(cfg, p, xt, C)
+    y = yt.reshape(B, S, D)
+    if m.num_shared:
+        y = y + mlp_block(cfg, p["shared"], x)
+    return constrain(y, "batch", "seq", None), jnp.mean(aux)

@@ -1,0 +1,168 @@
+"""RWKV6 "Finch" block: data-dependent per-channel decay linear attention.
+
+Training/prefill use a chunked parallel form: within a chunk the pairwise
+per-channel decay ``exp(lw_{t-1} - lw_i)`` is applied via log-cumsum-stable
+rescaled r~/k~ vectors (clamped at -40, below which the true factor is ~0);
+chunk-to-chunk state [B,H,K,V] is carried by ``lax.scan``.  Decode is the
+exact recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).  Chunked == recurrent is enforced by
+tests/test_models.py.
+
+Warp-level features of the paper's transform have no analogue here (noted in
+DESIGN.md S5: attention-free arch); the block still runs through the
+CuPBoP-lowered rmsnorm/matmul hot paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense, rmsnorm, silu, uniform_init
+
+LOG_CLAMP = -40.0
+
+
+def rdims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv_params(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = rdims(cfg)
+    dl = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": jnp.full((6, D), 0.5, jnp.float32),   # r,k,v,g,w,(cm) lerp mixes
+        "rkvg": uniform_init(ks[0], (D, 4 * D), 1.0, cfg.pdtype),
+        "w_base": jnp.full((D,), -1.0, jnp.float32),
+        "w1": uniform_init(ks[1], (D, dl), 1.0, cfg.pdtype),
+        "w2": uniform_init(ks[2], (dl, D), 0.1, cfg.pdtype),
+        "u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x": jnp.zeros((D,), jnp.float32),
+        "wo": uniform_init(ks[3], (D, D), 1.0, cfg.pdtype),
+        # channel mix
+        "cm_k": uniform_init(ks[4], (D, F), 1.0, cfg.pdtype),
+        "cm_v": uniform_init(ks[5], (F, D), 1.0, cfg.pdtype),
+        "cm_r": uniform_init(ks[6], (D, D), 1.0, cfg.pdtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or ``last`` [B,1,D] at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last.astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def _rkvgw(cfg, p, x, xprev):
+    """Project token-shift-mixed inputs to r,k,v,g [B,S,H,hd] and logw [B,S,H,hd]."""
+    B_, S_, D = x.shape
+    H, hd = rdims(cfg)
+    mu = p["mu"]
+    rkvg = dense(_mix(x, xprev, mu[0]), p["rkvg"], compute_dtype=cfg.cdtype)
+    r, k, v, g = jnp.split(rkvg, 4, axis=-1)
+    xw = _mix(x, xprev, mu[4]).astype(jnp.float32)
+    lora = jnp.tanh(xw @ p["w1"].astype(jnp.float32)) @ p["w2"].astype(
+        jnp.float32)
+    logw = -jnp.exp(p["w_base"] + lora)          # log decay, in (-inf, 0)
+    rs = r.reshape(B_, S_, H, hd).astype(jnp.float32)
+    ks_ = k.reshape(B_, S_, H, hd).astype(jnp.float32)
+    vs = v.reshape(B_, S_, H, hd).astype(jnp.float32)
+    return rs, ks_, vs, silu(g.astype(jnp.float32)), \
+        logw.reshape(B_, S_, H, hd)
+
+
+def _head_norm(cfg, y, p):
+    B_, S_, H, hd = y.shape
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + cfg.norm_eps)
+    yn = yn.reshape(B_, S_, H * hd) * (1.0 + p["ln_x"])
+    return yn
+
+
+def time_mix_full(cfg: ModelConfig, p, x, state=None, last=None):
+    """x: [B,S,D] -> (y, (wkv_state [B,H,hd,hd], last_token [B,1,D]))."""
+    B_, S_, D = x.shape
+    H, hd = rdims(cfg)
+    c = cfg.rwkv.chunk if S_ % cfg.rwkv.chunk == 0 else S_
+    nc = S_ // c
+    xprev = _shift(x, last)
+    r, k, v, g, logw = _rkvgw(cfg, p, x, xprev)
+    u = p["u"]
+
+    def by_chunk(a):
+        return jnp.moveaxis(a.reshape((B_, nc, c) + a.shape[2:]), 1, 0)
+
+    r_c, k_c, v_c, lw_c = map(by_chunk, (r, k, v, logw))
+    S0 = (jnp.zeros((B_, H, hd, hd), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    tril = jnp.tril(jnp.ones((c, c), bool), k=-1)    # strictly lower: i < t
+
+    def chunk_step(Sprev, inp):
+        rn, kn, vn, lwn = inp                        # [B,c,H,hd]
+        lcum = jnp.cumsum(lwn, axis=1)               # inclusive log-decay sum
+        lprev = lcum - lwn                           # lcum_{t-1}
+        # pairwise decay exp(lprev_t - lcum_i) realized as r~_t . k~_i; the
+        # symmetric clamp at LOG_CLAMP keeps both factors finite while pairs
+        # whose true product is > exp(LOG_CLAMP) stay exact (lcum monotone)
+        rt = rn * jnp.exp(jnp.maximum(lprev, LOG_CLAMP))
+        kt = kn * jnp.exp(jnp.minimum(-lcum, -LOG_CLAMP))
+        A = jnp.einsum("bthd,bihd->bhti", rt, kt)    # [B,H,t,i]
+        A = jnp.where(tril[None, None], A, 0.0)
+        y = jnp.einsum("bhti,bihd->bthd", A, vn)
+        # diag bonus: y_t += (r_t . (u*k_t)) v_t
+        diag = jnp.einsum("bthd,hd,bthd->bth", rn, u, kn)
+        y = y + diag[..., None] * vn
+        # inter-chunk: y_t += (r_t * exp(lprev_t)) . S_prev
+        y = y + jnp.einsum("bthk,bhkv->bthv", rt, Sprev)
+        # state: S_new = diag(exp(lcum_last)) S_prev
+        #              + sum_i (k_i * exp(lcum_last - lcum_i)) x v_i
+        dece = jnp.exp(lcum[:, -1:] - lcum)          # <= 1 elementwise
+        S_new = jnp.exp(lcum[:, -1])[..., None] * Sprev \
+            + jnp.einsum("bihk,bihv->bhkv", kn * dece, vn)
+        return S_new, y
+
+    S_final, y = lax.scan(chunk_step, S0, (r_c, k_c, v_c, lw_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(B_, S_, H, hd)
+    y = _head_norm(cfg, y, p) * g.reshape(B_, S_, D)
+    out = dense(y.astype(cfg.cdtype), p["wo"], compute_dtype=cfg.cdtype)
+    return constrain(out, "batch", "seq", None), (S_final, x[:, -1:, :])
+
+
+def time_mix_step(cfg: ModelConfig, p, x1, state, last):
+    """Decode one token. Returns (y1, state, new_last)."""
+    B_ = x1.shape[0]
+    H, hd = rdims(cfg)
+    r, k, v, g, logw = _rkvgw(cfg, p, x1, last.astype(x1.dtype))
+    r1, k1, v1, lw1 = (a[:, 0].reshape(B_, H, hd) for a in (r, k, v, logw))
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1,
+                   state + p["u"][None, :, :, None] * kv)
+    state = jnp.exp(lw1)[..., None] * state + kv
+    y = y.reshape(B_, 1, H, hd)
+    y = _head_norm(cfg, y, p) * g.reshape(B_, 1, -1)
+    out = dense(y.astype(cfg.cdtype), p["wo"], compute_dtype=cfg.cdtype)
+    return out, state, x1[:, -1:, :]
+
+
+def channel_mix(cfg: ModelConfig, p, x, last=None):
+    """RWKV channel mix. Returns (y, new_last)."""
+    xprev = _shift(x, last)
+    mu = p["mu"]
+    xk = _mix(x, xprev, mu[5])
+    xr = _mix(x, xprev, mu[3])
+    k = jnp.square(jax.nn.relu(dense(xk, p["cm_k"], compute_dtype=cfg.cdtype)))
+    k = constrain(k, "batch", "seq", "tp")
+    v = dense(k, p["cm_v"], compute_dtype=cfg.cdtype)
+    r = jax.nn.sigmoid(dense(xr, p["cm_r"], compute_dtype=cfg.cdtype)
+                       .astype(jnp.float32))
+    return (r * v.astype(jnp.float32)).astype(x.dtype), x[:, -1:, :]

@@ -1,0 +1,487 @@
+"""Decoder LM covering all assigned families (dense/moe/vlm/hybrid/ssm/audio).
+
+Everything scans over a stacked layer axis (params leaves are [L, ...]) with a
+configurable remat policy - this keeps the HLO one-layer-sized (critical for
+the 512-device dry-run) and matches production JAX LMs (MaxText-style).
+
+Entry points:
+  init_params(cfg, key)                         -> params pytree
+  forward(cfg, params, batch)                   -> (logits, aux)
+  loss_fn(cfg, params, batch)                   -> (loss, metrics)
+  init_cache(cfg, batch, max_len)               -> decode cache pytree
+  prefill(cfg, params, tokens, max_len)         -> (logits_last, cache)
+  decode_step(cfg, params, cache, tokens)       -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, mamba2, mlp as mlp_mod, moe as moe_mod, \
+    rwkv6
+from repro.models.common import cross_entropy, dense, rmsnorm, uniform_init
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, key):
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.rwkv is not None:
+        return {"ln1": jnp.zeros((D,), jnp.float32),
+                "ln2": jnp.zeros((D,), jnp.float32),
+                "rwkv": rwkv6.init_rwkv_params(ks[0], cfg)}
+    if cfg.ssm is not None:  # hybrid: mamba backbone (shared attn is global)
+        return {"ln1": jnp.zeros((D,), jnp.float32),
+                "mamba": mamba2.init_mamba_params(ks[0], cfg)}
+    layer = {"ln1": jnp.zeros((D,), jnp.float32),
+             "ln2": jnp.zeros((D,), jnp.float32),
+             "attn": attention.init_attn_params(ks[0], cfg)}
+    if cfg.moe is not None:
+        layer["moe"] = moe_mod.init_moe_params(ks[1], cfg)
+    else:
+        layer["mlp"] = mlp_mod.init_mlp_params(ks[1], D, cfg.d_ff, cfg.pdtype)
+    return layer
+
+
+def init_params(cfg: ModelConfig, key):
+    D, Vp, L = cfg.d_model, cfg.padded_vocab, cfg.num_layers
+    kemb, klay, khead, kshared, kpatch = jax.random.split(key, 5)
+    params: dict[str, Any] = {}
+    if cfg.num_codebooks > 1:
+        params["embed"] = {"codebooks": uniform_init(
+            kemb, (cfg.num_codebooks, Vp, D), 1.0, cfg.pdtype)}
+    else:
+        params["embed"] = {"tok": uniform_init(kemb, (Vp, D), 1.0,
+                                               cfg.pdtype)}
+    if cfg.patch_prefix:
+        params["embed"]["patch_proj"] = uniform_init(kpatch, (D, D), 1.0,
+                                                     cfg.pdtype)
+    params["layers"] = jax.vmap(lambda k: _init_layer(cfg, k))(
+        jax.random.split(klay, L))
+    if cfg.ssm is not None and cfg.attn_every:
+        params["shared_attn"] = {
+            "ln": jnp.zeros((D,), jnp.float32),
+            "attn": attention.init_attn_params(kshared, cfg)}
+    params["final_norm"] = jnp.zeros((D,), jnp.float32)
+    if cfg.num_codebooks > 1:
+        params["lm_heads"] = uniform_init(khead, (cfg.num_codebooks, D, Vp),
+                                          1.0, cfg.pdtype)
+    elif cfg.tie_embeddings:
+        pass  # reuse embed
+    else:
+        params["lm_head"] = uniform_init(khead, (D, Vp), 1.0, cfg.pdtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shapes without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def embed(cfg: ModelConfig, params, batch):
+    e = params["embed"]
+    if cfg.num_codebooks > 1:
+        toks = batch["tokens"]                       # [B, S, K]
+        parts = [e["codebooks"][k][toks[..., k]]     # summed codebook embeds
+                 for k in range(cfg.num_codebooks)]
+        x = sum(parts).astype(cfg.cdtype)
+    else:
+        x = e["tok"][batch["tokens"]].astype(cfg.cdtype)   # [B, S, D]
+    if cfg.patch_prefix and "patch_embeds" in batch:
+        pe = dense(batch["patch_embeds"].astype(cfg.cdtype), e["patch_proj"],
+                   compute_dtype=cfg.cdtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return constrain(x, "batch", "seq", None)
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_cast(dtype_name: str):
+    """Identity fwd; casts the cotangent to ``dtype_name`` in bwd.
+
+    Without this the f32 loss cotangent promotes the whole backward residual
+    chain to f32 (dlogits f32 @ lm_head bf16 -> f32), doubling every backward
+    activation collective and HBM transfer (optimization O4; found via the
+    A-cell collective profile, EXPERIMENTS.md SPerf)."""
+    import jax as _jax
+
+    @_jax.custom_vjp
+    def f(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (g.astype(dtype_name).astype(g.dtype),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def head(cfg: ModelConfig, params, x):
+    if cfg.compute_dtype != "float32":
+        x = _grad_cast(cfg.compute_dtype)(x)
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.num_codebooks > 1:
+        logits = jnp.einsum("bsd,kdv->bskv", xn.astype(cfg.cdtype),
+                            params["lm_heads"].astype(cfg.cdtype))
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", xn.astype(cfg.cdtype),
+                            params["embed"]["tok"].astype(cfg.cdtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", xn.astype(cfg.cdtype),
+                            params["lm_head"].astype(cfg.cdtype))
+    logits = logits.astype(jnp.float32)
+    if logits.ndim == 4:   # audio: [B, S, K, Vp]
+        return constrain(logits, "batch", "seq", None, "vocab")
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (full-sequence)
+# ---------------------------------------------------------------------------
+def res_constrain(cfg: ModelConfig, x):
+    """Residual-stream sharding between layers.
+
+    With cfg.seq_parallel the sequence axis shards over 'model' (Megatron
+    sequence parallelism): GSPMD turns the TP all-reduces after wo/w_down
+    into reduce-scatter + all-gather pairs around the matmuls, and all
+    norm/elementwise work + the layer-scan residual carry shrink by the TP
+    degree (beyond-paper optimization O1, EXPERIMENTS.md SPerf)."""
+    return constrain(x, "batch", "seq_sp" if cfg.seq_parallel else "seq",
+                     None)
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def _layer_full(cfg: ModelConfig, plan, shared, lp, x, positions, idx):
+    """One layer, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.rwkv is not None:
+        h, _ = rwkv6.time_mix_full(cfg, lp["rwkv"],
+                                   rmsnorm(x, lp["ln1"], cfg.norm_eps))
+        x = x + h
+        h, _ = rwkv6.channel_mix(cfg, lp["rwkv"],
+                                 rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x + h, aux
+    if cfg.ssm is not None:
+        h, _ = mamba2.mamba_full(cfg, lp["mamba"],
+                                 rmsnorm(x, lp["ln1"], cfg.norm_eps))
+        return x + h, aux
+    a, _ = attention.attend_full(cfg, plan, lp["attn"],
+                                 rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                                 positions)
+    x = x + a
+    xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        h, aux = moe_mod.moe_block(cfg, lp["moe"], xn)
+    else:
+        h = mlp_mod.mlp_block(cfg, lp["mlp"], xn)
+    return x + h, aux
+
+
+def hybrid_blocks(cfg: ModelConfig):
+    """zamba2 layout: 81 = full blocks of (shared-attn + k mambas) + tail.
+
+    Expressed as scans over block groups (no lax.cond) so the HLO loop trip
+    counts attribute the shared-attention cost exactly (hlo_analysis.py)."""
+    k = cfg.attn_every
+    full, tail = cfg.num_layers // k, cfg.num_layers % k
+    return k, full, tail
+
+
+def _shared_attn_apply(cfg, plan, shared, x, positions):
+    a, _ = attention.attend_full(cfg, plan, shared["attn"],
+                                 rmsnorm(x, shared["ln"], cfg.norm_eps),
+                                 positions)
+    return x + a
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """Full-sequence forward. Returns (logits, aux)."""
+    plan = attention.plan_for(cfg)
+    x = embed(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    shared = params.get("shared_attn")
+
+    def body(carry, lp_idx):
+        x, aux = carry
+        lp, idx = lp_idx
+        x, a = _layer_full(cfg, plan, shared, lp, x, positions, idx)
+        return (res_constrain(cfg, x), aux + a), None
+
+    body = _remat(cfg, body)
+    aux0 = jnp.zeros((), jnp.float32)
+    x = res_constrain(cfg, x)
+
+    if cfg.ssm is not None and cfg.attn_every and shared is not None:
+        # hybrid: scan over (attn + k mamba) blocks, then the tail block
+        k, full, tail = hybrid_blocks(cfg)
+        stack = lambda sl: jax.tree.map(
+            lambda a: a[sl].reshape((-1, k) + a.shape[1:]), params["layers"])
+
+        def block_body(carry, blk):
+            x, aux = carry
+            x = _shared_attn_apply(cfg, plan, shared, x, positions)
+            (x, aux), _ = lax.scan(
+                body, (x, aux), (blk, jnp.arange(k)))
+            return (x, aux), None
+
+        block_body = _remat(cfg, block_body)
+        (x, aux), _ = lax.scan(block_body, (x, aux0),
+                               stack(slice(0, full * k)))
+        if tail:
+            x = _shared_attn_apply(cfg, plan, shared, x, positions)
+            tail_params = jax.tree.map(lambda a: a[full * k:],
+                                       params["layers"])
+            (x, aux), _ = lax.scan(body, (x, aux),
+                                   (tail_params, jnp.arange(tail)))
+    else:
+        (x, aux), _ = lax.scan(
+            body, (x, aux0),
+            (params["layers"], jnp.arange(cfg.num_layers)))
+    return head(cfg, params, x), aux / cfg.num_layers
+
+
+def loss_fn(cfg: ModelConfig, params, batch, aux_weight=0.01):
+    logits, aux = forward(cfg, params, batch)
+    toks = batch["tokens"]
+    if cfg.num_codebooks > 1:
+        ce = cross_entropy(logits[:, :-1], toks[:, 1:],
+                           real_vocab=cfg.vocab_size)
+    else:
+        pref = cfg.patch_prefix
+        lg = logits[:, pref:, :]
+        ce = cross_entropy(lg[:, :-1], toks[:, 1:],
+                           real_vocab=cfg.vocab_size)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    L = cfg.num_layers
+    plan = attention.plan_for(cfg)
+    cdt = cfg.cdtype
+    if cfg.rwkv is not None:
+        H, hd = rwkv6.rdims(cfg)
+        return {"pos": jnp.zeros((), jnp.int32),
+                "wkv": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+                "last_tm": jnp.zeros((L, batch_size, 1, cfg.d_model), cdt),
+                "last_cm": jnp.zeros((L, batch_size, 1, cfg.d_model), cdt)}
+    if cfg.ssm is not None:
+        conv_s, ssm_s = mamba2.state_shapes(cfg, batch_size)
+        cache = {"pos": jnp.zeros((), jnp.int32),
+                 "conv": jnp.zeros((L,) + conv_s, jnp.float32),
+                 "ssm": jnp.zeros((L,) + ssm_s, jnp.float32)}
+        if cfg.attn_every:
+            napps = -(-L // cfg.attn_every)
+            cache["k"] = jnp.zeros(
+                (napps, batch_size, max_len, plan.hkv_p, cfg.hd), cdt)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        return cache
+    return {"pos": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((L, batch_size, max_len, plan.hkv_p, cfg.hd), cdt),
+            "v": jnp.zeros((L, batch_size, max_len, plan.hkv_p, cfg.hd), cdt)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One decode step. tokens: [B,1] ([B,1,K] audio). Returns (logits, cache)."""
+    plan = attention.plan_for(cfg)
+    x = embed(cfg, params, {"tokens": tokens})
+    pos = cache["pos"]
+    shared = params.get("shared_attn")
+
+    if cfg.rwkv is not None:
+        def body(x, inp):
+            lp, wkv, ltm, lcm = inp
+            h, wkv, ltm = rwkv6.time_mix_step(
+                cfg, lp["rwkv"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                wkv, ltm)
+            x = x + h
+            h, lcm = rwkv6.channel_mix(
+                cfg, lp["rwkv"], rmsnorm(x, lp["ln2"], cfg.norm_eps), lcm)
+            return x + h, (wkv, ltm.astype(cfg.cdtype),
+                           lcm.astype(cfg.cdtype))
+        x, (wkv, ltm, lcm) = lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["last_tm"],
+                      cache["last_cm"]))
+        new_cache = {"pos": pos + 1, "wkv": wkv, "last_tm": ltm,
+                     "last_cm": lcm}
+    elif cfg.ssm is not None:
+        def mamba_body(x, inp):
+            lp, conv, ssm = inp
+            h, conv, ssm = mamba2.mamba_step(
+                cfg, lp["mamba"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                conv, ssm)
+            return x + h, (conv, ssm)
+
+        if cfg.attn_every and shared is not None:
+            k_, full, tail = hybrid_blocks(cfg)
+
+            def attn_dec(x, kb, vb):
+                a, kb, vb = attention.attend_decode(
+                    cfg, plan, shared["attn"],
+                    rmsnorm(x, shared["ln"], cfg.norm_eps), kb, vb, pos)
+                return x + a, kb, vb
+
+            def block_body(x, inp):
+                blk, conv_b, ssm_b, kb, vb = inp
+                x, kb, vb = attn_dec(x, kb, vb)
+                x, (conv_b, ssm_b) = lax.scan(mamba_body, x,
+                                              (blk, conv_b, ssm_b))
+                return x, (conv_b, ssm_b, kb, vb)
+
+            grp = lambda a: a[: full * k_].reshape((full, k_) + a.shape[1:])
+            blk_params = jax.tree.map(grp, params["layers"])
+            x, (conv_f, ssm_f, kf, vf) = lax.scan(
+                block_body, x,
+                (blk_params, grp(cache["conv"]), grp(cache["ssm"]),
+                 cache["k"][:full], cache["v"][:full]))
+            conv = conv_f.reshape((full * k_,) + conv_f.shape[2:])
+            ssm = ssm_f.reshape((full * k_,) + ssm_f.shape[2:])
+            kc, vc = kf, vf
+            if tail:
+                x, kt, vt = attn_dec(x, cache["k"][full], cache["v"][full])
+                tailp = jax.tree.map(lambda a: a[full * k_:],
+                                     params["layers"])
+                x, (conv_t, ssm_t) = lax.scan(
+                    mamba_body, x,
+                    (tailp, cache["conv"][full * k_:],
+                     cache["ssm"][full * k_:]))
+                conv = jnp.concatenate([conv, conv_t], 0)
+                ssm = jnp.concatenate([ssm, ssm_t], 0)
+                kc = jnp.concatenate([kc, kt[None]], 0)
+                vc = jnp.concatenate([vc, vt[None]], 0)
+        else:
+            x, (conv, ssm) = lax.scan(
+                mamba_body, x,
+                (params["layers"], cache["conv"], cache["ssm"]))
+            kc = vc = None
+        new_cache = {"pos": pos + 1, "conv": conv, "ssm": ssm}
+        if kc is not None:
+            new_cache.update(k=kc, v=vc)
+    else:
+        def body(x, inp):
+            lp, k_l, v_l = inp
+            a, k_l, v_l = attention.attend_decode(
+                cfg, plan, lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                k_l, v_l, pos)
+            x = x + a
+            xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                h, _ = moe_mod.moe_block(cfg, lp["moe"], xn)
+            else:
+                h = mlp_mod.mlp_block(cfg, lp["mlp"], xn)
+            return x + h, (k_l, v_l)
+        x, (kc, vc) = lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"pos": pos + 1, "k": kc, "v": vc}
+
+    return head(cfg, params, x), new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Run the prompt, build a decode cache. Returns (logits_last, cache)."""
+    plan = attention.plan_for(cfg)
+    x = embed(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    shared = params.get("shared_attn")
+    cache = init_cache(cfg, B, max_len)
+
+    if cfg.rwkv is not None:
+        def body(x, lp):
+            xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            h, (wkv, ltm) = rwkv6.time_mix_full(cfg, lp["rwkv"], xn)
+            x = x + h
+            xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            h, lcm = rwkv6.channel_mix(cfg, lp["rwkv"], xn)
+            return x + h, (wkv, ltm.astype(cfg.cdtype),
+                           lcm.astype(cfg.cdtype))
+        x, (wkv, ltm, lcm) = lax.scan(body, x, params["layers"])
+        cache.update(wkv=wkv, last_tm=ltm, last_cm=lcm,
+                     pos=jnp.int32(S))
+    elif cfg.ssm is not None:
+        def mamba_body(x, lp):
+            h, (conv, ssm) = mamba2.mamba_full(
+                cfg, lp["mamba"], rmsnorm(x, lp["ln1"], cfg.norm_eps))
+            return x + h, (conv, ssm)
+
+        if cfg.attn_every and shared is not None:
+            k_, full, tail = hybrid_blocks(cfg)
+            Smax = cache["k"].shape[2]
+
+            def attn_pre(x):
+                a, (k, v) = attention.attend_full(
+                    cfg, plan, shared["attn"],
+                    rmsnorm(x, shared["ln"], cfg.norm_eps), positions)
+                pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+                return (x + a, jnp.pad(k.astype(cfg.cdtype), pad),
+                        jnp.pad(v.astype(cfg.cdtype), pad))
+
+            def block_body(x, blk):
+                x, kb, vb = attn_pre(x)
+                x, (conv_b, ssm_b) = lax.scan(mamba_body, x, blk)
+                return x, (conv_b, ssm_b, kb, vb)
+
+            grp = lambda a: a[: full * k_].reshape((full, k_) + a.shape[1:])
+            x, (conv_f, ssm_f, kf, vf) = lax.scan(
+                block_body, x, jax.tree.map(grp, params["layers"]))
+            conv = conv_f.reshape((full * k_,) + conv_f.shape[2:])
+            ssm = ssm_f.reshape((full * k_,) + ssm_f.shape[2:])
+            kc, vc = kf, vf
+            if tail:
+                x, kt, vt = attn_pre(x)
+                tailp = jax.tree.map(lambda a: a[full * k_:],
+                                     params["layers"])
+                x, (conv_t, ssm_t) = lax.scan(mamba_body, x, tailp)
+                conv = jnp.concatenate([conv, conv_t], 0)
+                ssm = jnp.concatenate([ssm, ssm_t], 0)
+                kc = jnp.concatenate([kc, kt[None]], 0)
+                vc = jnp.concatenate([vc, vt[None]], 0)
+            cache.update(conv=conv, ssm=ssm, k=kc, v=vc, pos=jnp.int32(S))
+        else:
+            x, (conv, ssm) = lax.scan(mamba_body, x, params["layers"])
+            cache.update(conv=conv, ssm=ssm, pos=jnp.int32(S))
+    else:
+        def body(x, lp):
+            a, (k, v) = attention.attend_full(
+                cfg, plan, lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                positions)
+            x = x + a
+            xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                h, _ = moe_mod.moe_block(cfg, lp["moe"], xn)
+            else:
+                h = mlp_mod.mlp_block(cfg, lp["mlp"], xn)
+            return x + h, (k, v)
+        x, (k, v) = lax.scan(body, x, params["layers"])
+        Smax = cache["k"].shape[2]
+        cache["k"] = cache["k"].at[:, :, :S].set(k.astype(cfg.cdtype))
+        cache["v"] = cache["v"].at[:, :, :S].set(v.astype(cfg.cdtype))
+        cache["pos"] = jnp.int32(S)
+
+    return head(cfg, params, x[:, -1:, :]), cache

@@ -1,0 +1,104 @@
+"""AdamW with configurable state dtype + WSD/cosine schedules + global clip.
+
+Optimizer states are sharded exactly like their parameters (ZeRO-3 falls out
+of the FSDP param specs), and their dtype is a scale-policy knob: >=30B
+configs use bf16 m/v so grok-1-314b fits the 16 GB/chip HBM budget on a
+single pod (DESIGN.md S6) - the dry-run memory_analysis validates this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    # schedule
+    schedule: str = "cosine"          # cosine | wsd | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: fraction of steps in final decay
+    lr_min_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        mult = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # warmup -> stable -> linear decay tail (MiniCPM, arXiv:2404.06395)
+        decay_start = 1.0 - cfg.decay_frac
+        frac = jnp.clip((t - decay_start) / cfg.decay_frac, 0, 1)
+        mult = 1.0 - (1.0 - cfg.lr_min_ratio) * frac
+    elif cfg.schedule == "linear":
+        mult = 1.0 - (1.0 - cfg.lr_min_ratio) * t
+    else:
+        mult = 1.0
+    return cfg.lr_peak * warm * mult
+
+
+def init_state(cfg: AdamWConfig, params) -> AdamWState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat, vhat = mf / b1c, vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = jax.tree.unflatten(tdef, [o[0] for o in out])
+    newm = jax.tree.unflatten(tdef, [o[1] for o in out])
+    newv = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return newp, AdamWState(step, newm, newv), {
+        "grad_norm": gnorm, "lr": lr}

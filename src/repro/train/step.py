@@ -1,0 +1,58 @@
+"""Jitted train/eval steps with microbatch accumulation and sharded I/O."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_loss(cfg: ModelConfig):
+    def loss(params, batch):
+        return T.loss_fn(cfg, params, batch)
+    return loss
+
+
+def train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, params,
+               opt_state, batch, microbatches: int = 1):
+    """One optimizer step; optionally accumulate over microbatches via scan."""
+    loss = make_loss(cfg)
+    if microbatches == 1:
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+    else:
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mbatch = jax.tree.map(split, batch)
+
+        def acc(carry, mb):
+            gsum, lsum = carry
+            (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), mbatch)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        l = lsum / microbatches
+        metrics = {}
+    params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+    return params, opt_state, {"loss": l, **metrics, **om}
+
+
+def eval_step(cfg: ModelConfig, params, batch):
+    l, metrics = make_loss(cfg)(params, batch)
+    return {"loss": l, **metrics}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1):
+    return functools.partial(train_step, cfg, opt_cfg,
+                             microbatches=microbatches)

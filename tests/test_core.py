@@ -1,0 +1,135 @@
+"""Core SPMD-to-MPMD transform: correctness, coverage parity, runtime."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Policy, Stream, UnsupportedKernel, launch
+from repro.core import grain as grain_mod
+from repro.core import packing
+from repro.core.cuda_suite import build_suite
+
+RNG = np.random.default_rng(0)
+SUITE = build_suite(scale=1)
+
+
+def _run(entry, backend, grain=1, **kw):
+    args = entry.make_args(np.random.default_rng(42))
+    out = launch(entry.kernel, grid=entry.grid, block=entry.block,
+                 args={k: jnp.asarray(v) for k, v in args.items()},
+                 backend=backend, grain=grain,
+                 dyn_shared=entry.dyn_shared, **kw)
+    return out, entry.reference(args)
+
+
+@pytest.mark.parametrize("entry", SUITE, ids=lambda e: e.name)
+@pytest.mark.parametrize("backend", ["loop", "vector", "pallas"])
+def test_suite_allclose(entry, backend):
+    out, want = _run(entry, backend)
+    for k, v in want.items():
+        np.testing.assert_allclose(np.asarray(out[k]), v,
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_loop_equals_vector_bitwise_structure():
+    """The paper-faithful loop lowering and the TPU vector lowering agree."""
+    for entry in SUITE:
+        o1, _ = _run(entry, "loop")
+        o2, _ = _run(entry, "vector")
+        for k in o1:
+            np.testing.assert_allclose(np.asarray(o1[k]), np.asarray(o2[k]),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# --- Table II coverage parity ------------------------------------------------
+def test_coverage_matrix():
+    """naive (no fission) < loop_nowarp (no warp ops) < loop (CuPBoP)."""
+    support = {}
+    for entry in SUITE:
+        for backend in ("naive", "loop_nowarp", "loop"):
+            try:
+                _run(entry, backend)
+                support[(entry.name, backend)] = True
+            except UnsupportedKernel:
+                support[(entry.name, backend)] = False
+    # full CuPBoP lowering covers everything
+    assert all(support[(e.name, "loop")] for e in SUITE)
+    # warp kernels are exactly the loop_nowarp gaps (Crystal q11-13 parity)
+    for e in SUITE:
+        assert support[(e.name, "loop_nowarp")] == ("warp" not in e.features)
+    # naive supports only barrier-free kernels (MCUDA-without-fission)
+    for e in SUITE:
+        expected = "barrier" not in e.features and "warp" not in e.features
+        assert support[(e.name, "naive")] == expected
+    cov = lambda b: sum(support[(e.name, b)] for e in SUITE) / len(SUITE)
+    assert cov("naive") < cov("loop_nowarp") < cov("loop")
+
+
+# --- grain-size fetching (SIV-A) ---------------------------------------------
+def test_grain_invariance():
+    entry = [e for e in SUITE if e.name == "histogram"][0]
+    base, want = _run(entry, "vector", grain=1)
+    for g in (2, 3, 5, 16, "average", "aggressive"):
+        out, _ = _run(entry, "vector", grain=g, pool=4)
+        np.testing.assert_array_equal(np.asarray(out["hist"]),
+                                      np.asarray(base["hist"]))
+
+
+def test_schedule_trace_fig6():
+    """Reproduce Fig. 6: grid=12, pool=3."""
+    avg = grain_mod.schedule_trace(12, 3, 4)      # average: 3 fetches
+    assert avg.n_fetches == 3 and avg.idle_workers == 0
+    assert avg.utilization == 1.0
+    agg = grain_mod.schedule_trace(12, 3, 6)      # aggressive: 2 fetches
+    assert agg.n_fetches == 2 and agg.idle_workers == 1
+
+
+def test_grain_heuristics():
+    assert grain_mod.average_grain(64, 8) == 8
+    # short blocks -> aggressive grains; long blocks -> fine grains
+    short = grain_mod.heuristic_grain(1024, 8, est_block_work=1e2)
+    long_ = grain_mod.heuristic_grain(1024, 8, est_block_work=1e7)
+    assert short > long_
+
+
+# --- stream runtime (SIII-C.1, Listing 4) -------------------------------------
+def test_stream_hazard_only_syncs_once():
+    entry = [e for e in SUITE if e.name == "vecadd"][0]
+    args = entry.make_args(RNG)
+    s = Stream({k: jnp.asarray(v) for k, v in args.items()},
+               policy=Policy.HAZARD_ONLY)
+    for _ in range(5):
+        s.launch(entry.kernel, grid=entry.grid, block=entry.block)
+    assert s.stats.syncs == 0          # async launches: no barrier yet
+    _ = s.memcpy_d2h("c")              # RAW hazard -> exactly one barrier
+    assert s.stats.syncs == 1 and s.stats.barriers_inserted == 1
+    _ = s.memcpy_d2h("a")              # read-only buffer: no new barrier
+    assert s.stats.syncs == 1
+
+
+def test_stream_sync_always_is_hipcpu():
+    entry = [e for e in SUITE if e.name == "vecadd"][0]
+    args = entry.make_args(RNG)
+    s = Stream({k: jnp.asarray(v) for k, v in args.items()},
+               policy=Policy.SYNC_ALWAYS)
+    for _ in range(5):
+        s.launch(entry.kernel, grid=entry.grid, block=entry.block)
+    assert s.stats.syncs == 5
+
+
+def test_stream_correct_result():
+    entry = [e for e in SUITE if e.name == "vecadd"][0]
+    args = entry.make_args(RNG)
+    s = Stream({k: jnp.asarray(v) for k, v in args.items()})
+    s.launch(entry.kernel, grid=entry.grid, block=entry.block)
+    np.testing.assert_allclose(s.memcpy_d2h("c"),
+                               entry.reference(args)["c"], rtol=1e-6)
+
+
+# --- parameter packing (SIII-C.2) ---------------------------------------------
+def test_packing_roundtrip():
+    tree = {"a": jnp.ones((3,)), "b": (jnp.zeros((2, 2)), jnp.ones(()))}
+    leaves, tdef = packing.pack(tree)
+    assert isinstance(leaves, tuple)
+    out = packing.unpack(leaves, tdef)
+    assert jnp.array_equal(out["a"], tree["a"])
+    assert jnp.array_equal(out["b"][0], tree["b"][0])

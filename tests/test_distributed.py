@@ -1,0 +1,188 @@
+"""Sharding rules, checkpointing, compression, fault tolerance, data."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import registry
+from repro.data.pipeline import Prefetcher, SyntheticLM, TextFileLM
+from repro.distributed import compression, sharding as shd
+from repro.distributed.ft import Heartbeat, StragglerMonitor
+from repro.models import transformer as T
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# --- sharding resolution -------------------------------------------------
+def test_resolve_divisibility(tmp_path):
+    mesh = shd.make_mesh((1,), ("data",))
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        import numpy as _np
+        devices = np.empty((2, 16, 16))
+    m = FakeMesh()
+    spec = shd.resolve(m, (256, 4096), ("batch", None))
+    assert spec == jax.sharding.PartitionSpec(("pod", "data"), None)
+    # batch=1 cannot shard
+    assert shd.resolve(m, (1, 5), ("batch", None))[0] is None
+    # 40 heads don't divide 16 -> unsharded (padding exists for this)
+    assert shd.resolve(m, (40, 64), ("heads", None))[0] is None
+    assert shd.resolve(m, (48, 64), ("heads", None))[0] == "model"
+    # no axis reuse across dims
+    spec = shd.resolve(m, (32, 32), ("heads", "vocab"))
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_param_specs_cover_all_leaves():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    cfg = registry.get("qwen2.5-32b")
+    pstruct = T.abstract_params(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(pstruct)
+    big_unsharded = []
+    for path, leaf in flat:
+        ps = shd.spec_for_path(FakeMesh(), shd._path_str(path), leaf.shape)
+        # every spec axis must divide the dim
+        sizes = {"data": 16, "model": 16}
+        for dim, ax in zip(leaf.shape, tuple(ps) + (None,) * 10):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            prod = int(np.prod([sizes[a] for a in axes]))
+            assert dim % prod == 0, (path, leaf.shape, ps)
+        n = int(np.prod(leaf.shape))
+        if n > 1_000_000 and all(a is None for a in tuple(ps)):
+            big_unsharded.append((shd._path_str(path), leaf.shape))
+    assert not big_unsharded, f"large replicated params: {big_unsharded}"
+
+
+# --- checkpointing ---------------------------------------------------------
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((8, 4)).astype("f")),
+            "opt": {"m": jnp.zeros((8, 4)), "step": jnp.int32(7)}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(10, t, extra={"data_step": 11}, blocking=True)
+    out, extra = mgr.restore(jax.tree.map(np.zeros_like, t))
+    assert extra["data_step"] == 11
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+    assert int(out["opt"]["step"]) == 7
+
+
+def test_ckpt_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.all_steps() == [2, 3]
+    assert mgr.latest_valid() == 3
+
+
+def test_ckpt_corruption_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1), blocking=True)
+    mgr.save(2, _tree(2), blocking=True)
+    # corrupt the newest checkpoint
+    path = os.path.join(str(tmp_path), "step_00000002", "w.npy")
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+    assert mgr.latest_valid() == 1          # falls back to the older one
+    out, _ = mgr.restore(jax.tree.map(np.zeros_like, _tree()))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_tree(1)["w"]))
+
+
+# --- gradient compression ---------------------------------------------------
+def test_quantize_error_bound():
+    rng = np.random.default_rng(0)
+    for scale in (1e-3, 1.0, 1e3):
+        g = jnp.asarray(rng.standard_normal(512).astype("f") * scale)
+        q, s = compression.quantize(g)
+        err = np.abs(np.asarray(compression.dequantize(q, s) - g))
+        assert err.max() <= float(s) * 0.5 + 1e-12
+
+def test_dcn_bytes():
+    comp, full = compression.dcn_bytes({"a": jnp.zeros((100,))})
+    assert comp == 100 and full == 400
+
+
+def test_compressed_psum_multidevice_subprocess():
+    """Full int8+EF DP loop on a forced 4-device mesh (examples demo)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable,
+                        os.path.join(os.path.dirname(__file__), "..",
+                                     "examples", "compressed_dp.py")],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "converged" in r.stdout
+
+
+# --- fault tolerance ----------------------------------------------------------
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    for _ in range(8):
+        rep = mon.record(1.0)
+    assert not rep.is_straggler
+    rep = mon.record(5.0)
+    assert rep.is_straggler and rep.recommended_grain_scale < 0.5
+
+
+def test_heartbeat_dead_hosts(tmp_path):
+    clock = {"t": 100.0}
+    hb0 = Heartbeat(str(tmp_path), 0, clock=lambda: clock["t"])
+    hb1 = Heartbeat(str(tmp_path), 1, clock=lambda: clock["t"])
+    hb0.beat(); hb1.beat()
+    assert hb0.dead_hosts(timeout=10) == []
+    clock["t"] = 120.0
+    hb0.beat()
+    assert hb0.dead_hosts(timeout=10) == [1]
+
+
+# --- data pipeline -------------------------------------------------------------
+def test_synthetic_seekable():
+    d = SyntheticLM(1000, 16, 8)
+    b1, b2 = d.batch_at(5), d.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d.batch_at(5)["tokens"],
+                              d.batch_at(6)["tokens"])
+    assert b1["tokens"].max() < 1000 and b1["tokens"].min() >= 0
+
+
+def test_synthetic_rank_sharding():
+    full = SyntheticLM(1000, 16, 8, rank=0, world=1)
+    r0 = SyntheticLM(1000, 16, 8, rank=0, world=2)
+    r1 = SyntheticLM(1000, 16, 8, rank=1, world=2)
+    assert r0.local_batch == 4
+    assert not np.array_equal(r0.batch_at(0)["tokens"],
+                              r1.batch_at(0)["tokens"])
+
+
+def test_prefetcher_resume():
+    d = SyntheticLM(1000, 8, 4)
+    p = Prefetcher(d, start_step=3)
+    s, b = p.next()
+    assert s == 3
+    np.testing.assert_array_equal(b["tokens"], d.batch_at(3)["tokens"])
+    p.close()
+
+
+def test_textfile_pipeline(tmp_path):
+    f = tmp_path / "corpus.txt"
+    f.write_text("hello world, this is a tiny corpus for byte-level lm " * 40)
+    d = TextFileLM(str(f), seq_len=16, global_batch=4)
+    b = d.batch_at(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"], d.batch_at(0)["tokens"])

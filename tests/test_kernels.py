@@ -1,0 +1,79 @@
+"""Pallas TPU kernels: shape/dtype sweeps vs pure-jnp oracles (interpret)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32)
+                       ).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,Sq,Skv,d,causal", [
+    (1, 4, 4, 128, 128, 64, True),     # MHA causal
+    (2, 8, 2, 256, 256, 64, True),     # GQA 4:1
+    (1, 4, 1, 64, 256, 128, False),    # MQA cross
+    (2, 2, 2, 1, 128, 64, False),      # decode-shaped
+    (1, 6, 3, 96, 96, 32, True),       # non-128-aligned
+])
+def test_flash_attention_sweep(B, H, Hkv, Sq, Skv, d, causal, dtype):
+    q = _mk((B, H, Sq, d), dtype)
+    k = _mk((B, Hkv, Skv, d), dtype)
+    v = _mk((B, Hkv, Skv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, mode="interpret",
+                              q_blk=32, kv_blk=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,D,grain", [(64, 256, 8), (33, 128, 8),
+                                          (8, 512, 1)])
+def test_rmsnorm_sweep(rows, D, grain, dtype):
+    x = _mk((rows, D), dtype)
+    s = _mk((D,), jnp.float32)
+    out = ops.rmsnorm(x, s, mode="interpret", grain=grain)
+    want = ref.rmsnorm_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,N,K,grain", [(128, 128, 128, 1),
+                                         (256, 128, 64, 2),
+                                         (64, 256, 128, 1)])
+def test_matmul_sweep(M, N, K, grain, dtype):
+    a, b = _mk((M, K), dtype), _mk((K, N), dtype)
+    out = ops.matmul(a, b, mode="interpret", bm=64, bn=64, bk=64, grain=grain)
+    want = ref.matmul_ref(a, b)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_flash():
+    """Kernel and the model's XLA flash path agree (same math)."""
+    from repro.models.attention import flash_attention as model_flash
+    B, S, Hkv, g, hd = 1, 128, 2, 2, 64
+    q = _mk((B, S, Hkv, g, hd), jnp.float32)
+    k = _mk((B, S, Hkv, hd), jnp.float32)
+    v = _mk((B, S, Hkv, hd), jnp.float32)
+    m = model_flash(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    qh = jnp.moveaxis(q.reshape(B, S, Hkv * g, hd), 1, 2)
+    pk = ops.flash_attention(qh, jnp.moveaxis(k, 1, 2),
+                             jnp.moveaxis(v, 1, 2), causal=True,
+                             mode="interpret", q_blk=32, kv_blk=32)
+    pk = jnp.moveaxis(pk, 2, 1).reshape(B, S, Hkv, g, hd)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(pk),
+                               rtol=2e-5, atol=2e-5)

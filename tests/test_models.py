@@ -1,0 +1,194 @@
+"""Model semantics: prefill+decode == full forward; padding equivalence;
+flash custom-VJP gradients."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import attention, transformer as T
+from repro.models.padding import gqa_pad_plan
+
+CONSISTENCY_ARCHS = ["qwen2.5-32b", "zamba2-7b", "rwkv6-1.6b",
+                     "musicgen-medium", "minicpm-2b"]
+
+
+def _toks(cfg, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, S)
+    return rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+
+
+def _consistency(cfg, tol=5e-5):
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = _toks(cfg, B, S)
+    logits_full, _ = T.forward(cfg, params, {"tokens": toks})
+    Sp = S - 4
+    lg, cache = T.prefill(cfg, params, {"tokens": toks[:, :Sp]}, max_len=S)
+    errs = [float(np.abs(np.asarray(lg[:, 0])
+                         - np.asarray(logits_full[:, Sp - 1])).max())]
+    for t in range(Sp, S):
+        lg, cache = T.decode_step(cfg, params, cache,
+                                  jnp.asarray(toks[:, t:t + 1]))
+        errs.append(float(np.abs(np.asarray(lg[:, 0])
+                                 - np.asarray(logits_full[:, t])).max()))
+    assert max(errs) < tol, errs
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_decode_consistency(arch):
+    _consistency(registry.smoke(arch))
+
+
+@pytest.mark.parametrize("arch", ["grok-1-314b", "deepseek-moe-16b"])
+def test_moe_consistency_no_drop(arch):
+    """With no-drop capacity, MoE prefill/decode matches exactly; routing is
+    deterministic and the only train/serve divergence is capacity drops."""
+    cfg = registry.smoke(arch)
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    _consistency(cfg)
+
+
+def test_zamba_tail_block():
+    """81 = 13x6+3 layout: the tail block (attn + k<6 mambas) is exercised."""
+    cfg = registry.smoke("zamba2-7b").replace(num_layers=5)  # 2 blocks + tail
+    _consistency(cfg)
+
+
+def test_decode_cache_isolation():
+    """Tokens fed to one batch row don't leak into another row's logits."""
+    cfg = registry.smoke("qwen2-0.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toksA = _toks(cfg, 2, 8, seed=1)
+    toksB = toksA.copy()
+    toksB[1] = (toksB[1] + 7) % cfg.vocab_size   # change only row 1
+    _, cacheA = T.prefill(cfg, params, {"tokens": toksA}, max_len=12)
+    _, cacheB = T.prefill(cfg, params, {"tokens": toksB}, max_len=12)
+    nxt = jnp.asarray(toksA[:, :1])
+    lgA, _ = T.decode_step(cfg, params, cacheA, nxt)
+    lgB, _ = T.decode_step(cfg, params, cacheB, nxt)
+    np.testing.assert_allclose(np.asarray(lgA[0]), np.asarray(lgB[0]),
+                               rtol=1e-5, atol=1e-5)   # row 0 unchanged
+    assert np.abs(np.asarray(lgA[1]) - np.asarray(lgB[1])).max() > 1e-3
+
+
+# --------------------------------------------------------------------------
+# GQA head-padding equivalence (DESIGN.md S6)
+# --------------------------------------------------------------------------
+def _expand_attn_params(p_unpad, plan, hd, qkv_bias):
+    """Build padded attention params from unpadded via the plan maps."""
+    import numpy as np
+    D = p_unpad["wq"].shape[0]
+    out = {}
+    wq = np.zeros((D, plan.hq_p, hd), np.float32)
+    wo = np.zeros((plan.hq_p, hd, D), np.float32)
+    uq = np.asarray(p_unpad["wq"]).reshape(D, plan.hq, hd)
+    uo = np.asarray(p_unpad["wo"]).reshape(plan.hq, hd, D)
+    for j, src in enumerate(plan.qmap):
+        if src >= 0:
+            wq[:, j] = uq[:, src]
+            wo[j] = uo[src]
+    wk = np.zeros((D, plan.hkv_p, hd), np.float32)
+    wv = np.zeros((D, plan.hkv_p, hd), np.float32)
+    uk = np.asarray(p_unpad["wk"]).reshape(D, plan.hkv, hd)
+    uv = np.asarray(p_unpad["wv"]).reshape(D, plan.hkv, hd)
+    for j, src in enumerate(plan.kvmap):
+        if src >= 0:
+            wk[:, j] = uk[:, src]
+            wv[:, j] = uv[:, src]
+    out = {"wq": jnp.asarray(wq.reshape(D, -1)),
+           "wk": jnp.asarray(wk.reshape(D, -1)),
+           "wv": jnp.asarray(wv.reshape(D, -1)),
+           "wo": jnp.asarray(wo.reshape(-1, D))}
+    if qkv_bias:
+        for name, hmap, h_p in (("bq", plan.qmap, plan.hq_p),
+                                ("bk", plan.kvmap, plan.hkv_p),
+                                ("bv", plan.kvmap, plan.hkv_p)):
+            b = np.zeros((h_p, hd), np.float32)
+            ub = np.asarray(p_unpad[name]).reshape(-1, hd)
+            for j, src in enumerate(hmap):
+                if src >= 0:
+                    b[j] = ub[src]
+            out[name] = jnp.asarray(b.reshape(-1))
+    return out
+
+
+@pytest.mark.parametrize("hq,hkv,align", [(40, 8, 16), (36, 36, 16),
+                                          (14, 2, 16), (24, 24, 16),
+                                          (6, 2, 4)])
+def test_padding_preserves_attention(hq, hkv, align):
+    """Padded attention == unpadded attention, exactly."""
+    hd, D, B, S = 16, 64, 2, 24
+    rng = np.random.default_rng(0)
+    base = registry.get("cupbop-demo-120m").replace(
+        num_heads=hq, num_kv_heads=hkv, d_model=D, head_dim=hd,
+        qkv_bias=True, q_chunk=8, kv_chunk=8)
+    cfg_un = base.replace(tp_align=1)
+    cfg_pad = base.replace(tp_align=align)
+    plan_un = attention.plan_for(cfg_un)
+    plan_pad = attention.plan_for(cfg_pad)
+    assert plan_un.is_identity
+    p_un = attention.init_attn_params(jax.random.PRNGKey(2), cfg_un)
+    # randomize bias to make the test strong
+    p_un["bq"] = jnp.asarray(rng.standard_normal(hq * hd).astype(np.float32))
+    p_pad = _expand_attn_params(p_un, plan_pad, hd, True)
+    x = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y_un, _ = attention.attend_full(cfg_un, plan_un, p_un, x, pos)
+    y_pad, _ = attention.attend_full(cfg_pad, plan_pad, p_pad, x, pos)
+    np.testing.assert_allclose(np.asarray(y_un), np.asarray(y_pad),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padding_dummy_heads_stay_zero_after_training():
+    """Dummy-head gradients vanish: wq/wo padding slots stay exactly zero."""
+    from repro.optim import adamw
+    from repro.train import step as train_mod
+    cfg = registry.smoke("qwen2-0.5b").replace(
+        num_heads=3, num_kv_heads=1, head_dim=16, tp_align=4)
+    plan = attention.plan_for(cfg)
+    assert not plan.is_identity
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr_peak=1e-2, total_steps=5, warmup_steps=1,
+                                weight_decay=0.0)
+    opt = adamw.init_state(opt_cfg, params)
+    step = jax.jit(train_mod.make_train_step(cfg, opt_cfg))
+    batch = {"tokens": _toks(cfg, 2, 16)}
+    for _ in range(3):
+        params, opt, _ = step(params, opt, batch)
+    hd = cfg.hd
+    wq = np.asarray(params["layers"]["attn"]["wq"]).reshape(
+        cfg.num_layers, cfg.d_model, plan.hq_p, hd)
+    for j, src in enumerate(plan.qmap):
+        if src < 0:
+            assert np.all(wq[:, :, j] == 0.0), f"dummy q head {j} trained"
+
+
+def test_flash_vjp_matches_autodiff():
+    from repro.kernels.ref import flash_attention_ref
+    B, S, Hkv, g, hd = 2, 32, 2, 2, 16
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((B, S, Hkv, g, hd)).astype("f"))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype("f"))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype("f"))
+
+    def ours(q, k, v):
+        o = attention.flash_attention_trainable(q, k, v, causal=True,
+                                                q_chunk=8, kv_chunk=8)
+        return jnp.sum(jnp.tanh(o))
+
+    def theirs(q, k, v):
+        qh = jnp.moveaxis(q.reshape(B, S, Hkv * g, hd), 1, 2)
+        o = flash_attention_ref(qh, jnp.moveaxis(k, 1, 2),
+                                jnp.moveaxis(v, 1, 2), causal=True)
+        return jnp.sum(jnp.tanh(
+            jnp.moveaxis(o, 2, 1).reshape(B, S, Hkv, g, hd)))
+
+    g1 = jax.grad(ours, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(theirs, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)

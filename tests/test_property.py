@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import launch, warp
+from repro.core import grain as grain_mod
+from repro.core.cuda_suite import make_histogram, make_vecadd
+from repro.distributed import compression
+from repro.models.common import cross_entropy
+from repro.models.padding import gqa_pad_plan
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# --- grain invariance: results never depend on the fetch schedule ----------
+@SET
+@given(n=st.integers(32, 512), block=st.sampled_from([32, 64, 128]),
+       grain=st.integers(1, 20), seed=st.integers(0, 100))
+def test_vecadd_grain_invariant(n, block, grain, seed):
+    rng = np.random.default_rng(seed)
+    k = make_vecadd(n)
+    grid = -(-n // block)
+    args = {"a": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "b": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "c": jnp.zeros(n, jnp.float32)}
+    out = launch(k, grid=grid, block=block, args=args, backend="vector",
+                 grain=grain)
+    np.testing.assert_allclose(np.asarray(out["c"]),
+                               np.asarray(args["a"]) + np.asarray(args["b"]),
+                               rtol=1e-6)
+
+
+@SET
+@given(nbins=st.integers(2, 64), grain=st.integers(1, 8),
+       seed=st.integers(0, 50))
+def test_histogram_conserves_mass(nbins, grain, seed):
+    rng = np.random.default_rng(seed)
+    n, block, grid = 1024, 64, 4
+    k = make_histogram(n, nbins, grid * block)
+    x = rng.integers(0, nbins, n).astype(np.int32)
+    out = launch(k, grid=grid, block=block,
+                 args={"x": jnp.asarray(x),
+                       "hist": jnp.zeros(nbins, jnp.int32)},
+                 backend="vector", grain=grain)
+    hist = np.asarray(out["hist"])
+    assert hist.sum() == n
+    np.testing.assert_array_equal(hist, np.bincount(x, minlength=nbins))
+
+
+# --- warp ops ---------------------------------------------------------------
+@SET
+@given(mask=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 50))
+def test_shfl_xor_involution(mask, seed):
+    v = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal(64).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(warp.shfl_xor(warp.shfl_xor(v, mask), mask)),
+        np.asarray(v))
+
+
+@SET
+@given(seed=st.integers(0, 50))
+def test_warp_reduce_matches_numpy(seed):
+    v = np.random.default_rng(seed).standard_normal(96).astype(np.float32)
+    out = np.asarray(warp.reduce(jnp.asarray(v), "add"))
+    want = np.repeat(v.reshape(3, 32).sum(1), 32)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+# --- scheduler (Fig. 6 semantics) --------------------------------------------
+@SET
+@given(grid=st.integers(1, 200), pool=st.integers(1, 16),
+       grain=st.integers(1, 64))
+def test_schedule_covers_all_blocks(grid, pool, grain):
+    tr = grain_mod.schedule_trace(grid, pool, grain)
+    assert sum(tr.per_worker_blocks) == grid
+    assert tr.n_fetches == -(-grid // grain)
+    assert 0 < tr.utilization <= 1.0 + 1e-9
+
+
+# --- GQA padding plan invariants ---------------------------------------------
+@SET
+@given(hkv=st.integers(1, 48), r=st.integers(1, 8),
+       align=st.sampled_from([2, 4, 8, 16]))
+def test_pad_plan_invariants(hkv, r, align):
+    hq = hkv * r
+    plan = gqa_pad_plan(hq, hkv, align)
+    assert plan.hq_p % align == 0 and plan.hkv_p % align == 0
+    assert plan.hq_p == plan.hkv_p * plan.group_p
+    # every original q head appears exactly once
+    real_q = [m for m in plan.qmap if m >= 0]
+    assert sorted(real_q) == list(range(hq))
+    # q -> kv grouping preserved: padded q j maps to padded kv j//g whose
+    # original kv equals the original q's kv owner
+    for j, src in enumerate(plan.qmap):
+        if src < 0:
+            continue
+        kv_owner = plan.kvmap[j // plan.group_p]
+        assert kv_owner == src // r
+
+
+# --- compression ---------------------------------------------------------------
+@SET
+@given(seed=st.integers(0, 100),
+       scale=st.floats(1e-4, 1e4),
+       bits=st.sampled_from([4, 8]))
+def test_quantize_bounded(seed, scale, bits):
+    g = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal(128).astype(np.float32) * scale)
+    q, s = compression.quantize(g, bits)
+    err = np.abs(np.asarray(compression.dequantize(q, s) - g))
+    assert err.max() <= float(s) * 0.5 * 1.001 + 1e-12
+
+
+# --- loss ---------------------------------------------------------------------
+@SET
+@given(seed=st.integers(0, 50), vpad=st.integers(0, 7))
+def test_cross_entropy_vs_naive(seed, vpad):
+    rng = np.random.default_rng(seed)
+    V = 11
+    logits = rng.standard_normal((3, 5, V + vpad)).astype(np.float32)
+    logits[..., V:] = rng.standard_normal((3, 5, vpad)) * 10  # garbage pad
+    targets = rng.integers(0, V, (3, 5)).astype(np.int32)
+    ours = float(cross_entropy(jnp.asarray(logits), jnp.asarray(targets),
+                               real_vocab=V))
+    p = logits[..., :V]
+    p = p - p.max(-1, keepdims=True)
+    logp = p - np.log(np.exp(p).sum(-1, keepdims=True))
+    want = -np.take_along_axis(logp, targets[..., None], -1).mean()
+    np.testing.assert_allclose(ours, want, rtol=1e-4, atol=1e-5)

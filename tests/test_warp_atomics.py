@@ -1,0 +1,70 @@
+"""Warp-level intrinsics + atomics adaptation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import atomics, warp
+
+RNG = np.random.default_rng(3)
+
+
+def test_shfl_scalar_src():
+    v = jnp.arange(64, dtype=jnp.float32)
+    out = warp.shfl(v, 5)
+    want = np.concatenate([np.full(32, 5.0), np.full(32, 37.0)])
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+def test_shfl_per_thread_src():
+    v = jnp.arange(32, dtype=jnp.float32)
+    src = jnp.asarray((np.arange(32) + 1) % 32)
+    out = warp.shfl(v, src)
+    np.testing.assert_array_equal(np.asarray(out), (np.arange(32) + 1) % 32)
+
+
+def test_shfl_down_keeps_own_value_out_of_range():
+    v = jnp.arange(32, dtype=jnp.float32)
+    out = np.asarray(warp.shfl_down(v, 4))
+    np.testing.assert_array_equal(out[:28], np.arange(4, 32))
+    np.testing.assert_array_equal(out[28:], np.arange(28, 32))  # CUDA keeps own
+
+
+def test_shfl_xor_butterfly_sum():
+    v = jnp.asarray(RNG.standard_normal(64).astype(np.float32))
+    acc = v
+    for off in (16, 8, 4, 2, 1):
+        acc = acc + warp.shfl_xor(acc, off)
+    want = np.repeat(np.asarray(v).reshape(2, 32).sum(1), 32)
+    np.testing.assert_allclose(np.asarray(acc), want, rtol=1e-5)
+
+
+def test_vote_and_ballot():
+    pred = jnp.asarray(np.arange(32) < 3)
+    assert not bool(np.asarray(warp.vote_all(pred))[0])
+    assert bool(np.asarray(warp.vote_any(pred))[0])
+    bits = int(np.asarray(warp.ballot(pred))[0])
+    assert bits == 0b111
+
+
+def test_atomic_add_duplicate_indices():
+    arr = jnp.zeros(4)
+    idx = jnp.asarray([1, 1, 1, 2])
+    out = atomics.atomic_add(arr, idx, jnp.ones(4))
+    np.testing.assert_array_equal(np.asarray(out), [0, 3, 1, 0])
+
+
+def test_atomic_cas_first_wins():
+    arr = jnp.zeros(4, jnp.int32)
+    idx = jnp.asarray([2, 2, 3])
+    cmp = jnp.asarray([0, 0, 0])
+    val = jnp.asarray([7, 9, 5])
+    out = atomics.atomic_cas_first(arr, idx, cmp, val)
+    assert np.asarray(out)[2] == 7      # lowest thread id won
+    assert np.asarray(out)[3] == 5
+
+
+def test_atomic_cas_compare_fails():
+    arr = jnp.full((4,), 1, jnp.int32)
+    out = atomics.atomic_cas_first(arr, jnp.asarray([0]), jnp.asarray([0]),
+                                   jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(out), [1, 1, 1, 1])
