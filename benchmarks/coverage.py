@@ -16,10 +16,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import UnsupportedKernel, launch
+from repro.core import UnsupportedKernel, backend_names
 from repro.core.cuda_suite import build_suite
 
-FRAMEWORKS = ("naive", "loop_nowarp", "loop", "vector", "pallas")
+
+def frameworks() -> tuple[str, ...]:
+    """Columns come from the live backend registry, not a frozen tuple."""
+    return backend_names()
 
 
 def run() -> dict:
@@ -30,11 +33,11 @@ def run() -> dict:
         row = {}
         args = e.make_args(rng)
         want = e.reference(args)
-        for fw in FRAMEWORKS:
+        cfg = e.kernel[e.grid, e.block, e.dyn_shared]
+        for fw in frameworks():
             try:
-                out = launch(e.kernel, grid=e.grid, block=e.block,
-                             args={k: jnp.asarray(v) for k, v in args.items()},
-                             backend=fw, dyn_shared=e.dyn_shared)
+                out = cfg.on(backend=fw)(
+                    {k: jnp.asarray(v) for k, v in args.items()})
                 ok = all(np.allclose(np.asarray(out[k]), v, rtol=2e-5,
                                      atol=2e-5) for k, v in want.items())
                 row[fw] = "correct" if ok else "incorrect"
@@ -47,18 +50,19 @@ def run() -> dict:
 def main():
     table = run()
     names = sorted(table)
-    print("kernel," + ",".join(FRAMEWORKS) + ",features")
+    fws = frameworks()
+    print("kernel," + ",".join(fws) + ",features")
     for n in names:
         row, feats = table[n]
-        print(n + "," + ",".join(row[f] for f in FRAMEWORKS)
+        print(n + "," + ",".join(row[f] for f in fws)
               + "," + "|".join(feats))
     print()
-    for fw in FRAMEWORKS:
+    for fw in fws:
         cov = 100.0 * sum(table[n][0][fw] == "correct" for n in names) \
             / len(names)
         print(f"coverage_{fw},{cov:.1f},%")
     cov = {fw: sum(table[n][0][fw] == "correct" for n in names)
-           for fw in FRAMEWORKS}
+           for fw in fws}
     assert cov["naive"] < cov["loop_nowarp"] < cov["loop"] == cov["vector"], \
         "paper's coverage ordering must reproduce"
     print("paper_ordering,1,naive<nowarp<cupbop (Table II reproduced)")

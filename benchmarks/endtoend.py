@@ -11,22 +11,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import launch
+from repro.core import cache_clear
 from repro.core.cuda_suite import build_suite
 
 
 def main(scale: int = 4):
     suite = build_suite(scale=scale)
     rng = np.random.default_rng(0)
+    cache_clear()      # benchmark isolation: no precompiled launches
     print("kernel,loop_us,vector_us,speedup")
     geo = []
     for e in suite:
         args = {k: jnp.asarray(v) for k, v in e.make_args(rng).items()}
+        cfg = e.kernel[e.grid, e.block, e.dyn_shared]
         ts = {}
         for backend in ("loop", "vector"):
-            fn = lambda: launch(e.kernel, grid=e.grid, block=e.block,
-                                args=args, backend=backend,
-                                dyn_shared=e.dyn_shared)
+            fn = lambda: cfg.on(backend=backend)(args)
             ts[backend] = time_call(fn, warmup=1, iters=3) * 1e6
         sp = ts["loop"] / ts["vector"]
         geo.append(sp)

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import launch
 from repro.core import grain as grain_mod
 from repro.core.cuda_suite import make_histogram, make_vecadd
 
@@ -28,9 +27,9 @@ GRAINS = (1, 2, 4, 8, 16, 24, 32)
 def bench_kernel(name, kernel, grid, block, args):
     print(f"# {name}: est_block_work={kernel.est_block_work:.0f}")
     times = {}
+    cfg = kernel[grid, block]
     for g in GRAINS:
-        fn = lambda: launch(kernel, grid=grid, block=block, args=args,
-                            backend="vector", grain=g)
+        fn = lambda: cfg.on(grain=g)(args)
         tr = grain_mod.schedule_trace(grid, POOL, g)
         t = time_call(fn, warmup=1, iters=5) * 1e6
         times[g] = t

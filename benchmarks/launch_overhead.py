@@ -30,11 +30,13 @@ def main():
     results = {}
     for pol in (Policy.HAZARD_ONLY, Policy.SYNC_ALWAYS):
         s = Stream(dict(bufs), policy=pol)
-        s.launch(kernel, grid=-(-n // block), block=block)   # compile warmup
+        cfg = kernel[-(-n // block), block, None, s]   # <<<g, b, 0, s>>>
+        cfg()                                          # compile warmup
         s.synchronize()
+        s.stats.syncs = 0
         t0 = time.perf_counter()
         for _ in range(N_LAUNCH):
-            s.launch(kernel, grid=-(-n // block), block=block)
+            cfg()
         _ = s.memcpy_d2h("c")
         dt = time.perf_counter() - t0
         results[pol.value] = (dt, s.stats.syncs)

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import launch
 from repro.core.cuda_suite import make_histogram
 
 
@@ -27,8 +26,7 @@ def main():
                                nbins, tt, layout=layout)
             args = {"x": x if backend == "vector" else x[: n // 16],
                     "hist": jnp.zeros(nbins, jnp.int32)}
-            fn = lambda: launch(k, grid=grid, block=block, args=args,
-                                backend=backend)
+            fn = lambda: k[grid, block].on(backend=backend)(args)
             t = time_call(fn, warmup=1, iters=3) * 1e6
             times[(backend, layout)] = t
             print(f"hist_{backend}_{layout},{t:.0f},us "

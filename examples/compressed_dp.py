@@ -39,23 +39,34 @@ def local_grad(w, x, y):
     return jax.grad(loss)(w)
 
 
+LR, STEPS = 0.25, 600
+
+
 @jax.jit
 def step(w, err, x, y):
     def per_pod(w, e, x, y):
         g = local_grad(w, x, y)
-        g_red, e_new = compressed_psum({"w": g}, "pod", {"w": e})
-        return g_red["w"], e_new["w"]
+        g_red, e_new = compressed_psum({"w": g}, "pod", {"w": e[0]})
+        return g_red["w"], e_new["w"][None]
 
+    # The error-feedback residual is *per-pod* state (each pod keeps its own
+    # quantization error), so it carries a leading pod axis through
+    # shard_map.  check_rep=False: the reduced gradient IS replicated (psum)
+    # but the static rep-check cannot infer that through the int8 round-trip.
     g, err = shard_map(per_pod, mesh=mesh,
-                       in_specs=(P(), P(), P("pod"), P("pod")),
-                       out_specs=(P(), P()))(w, err, x, y)
-    return w - 0.1 * g, err
+                       in_specs=(P(), P("pod"), P("pod"), P("pod")),
+                       out_specs=(P(), P("pod")),
+                       check_rep=False)(w, err, x, y)
+    return w - LR * g, err
 
 
-err = jnp.zeros_like(W)
+err = jnp.zeros((mesh.devices.size,) + W.shape, W.dtype)
 w = W
-for i in range(400):
+for i in range(STEPS):
     w, err = step(w, err, X, Y)
+    # serialize dispatch: XLA-CPU's cross-module all-reduce rendezvous can
+    # deadlock when many async steps' collectives overlap in flight
+    jax.block_until_ready(w)
 final = float(jnp.mean((X @ w - Y) ** 2))
 comp, full = dcn_bytes({"w": W})
 print(f"final mse {final:.5f} (int8+EF converged) "

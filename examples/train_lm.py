@@ -8,7 +8,6 @@ WSD/cosine schedule, async checkpointing, auto-resume, straggler monitor.
   PYTHONPATH=src python examples/train_lm.py --full --steps 300
 """
 import argparse
-import sys
 
 from repro.launch import train
 

@@ -1,0 +1,48 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the jax baked into the image; these helpers let the same
+source run on neighbouring versions:
+
+* ``Compiled.cost_analysis()`` returned a per-computation *list* of dicts
+  before jax 0.5 and a flat dict after;
+* ``jax.sharding.AxisType`` (explicit-sharding mesh axis types) only exists
+  on newer jax - older meshes are implicitly ``Auto`` everywhere;
+* ``pallas.tpu.CompilerParams`` was named ``TPUCompilerParams`` before the
+  0.5 rename.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` to one flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca or {})
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` kwargs for mesh constructors, when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` post-0.6, ``with mesh:`` before."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # Mesh is itself a context manager on older jax
+
+
+def tpu_compiler_params(**kwargs):
+    """Build pallas-TPU compiler params across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -1,5 +1,20 @@
 """CuPBoP-JAX core: the paper's SPMD-to-MPMD transform + runtime, in JAX."""
-from repro.core.api import BACKENDS, launch, supported
+from repro.core.api import (
+    LaunchConfig,
+    cache_clear,
+    coverage,
+    launch,
+    supported,
+)
+from repro.core.backends import (
+    Backend,
+    UnknownBackend,
+    backend_names,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
+from repro.core.dim3 import Dim3
 from repro.core.kernel import (
     WARP_SIZE,
     BlockState,
@@ -7,9 +22,19 @@ from repro.core.kernel import (
     KernelDef,
     UnsupportedKernel,
 )
-from repro.core.streams import Policy, Stream
+from repro.core.streams import Event, Policy, Runtime, Stream
+
+
+def __getattr__(name):
+    if name == "BACKENDS":  # legacy alias; live view of the registry
+        return backend_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
-    "BACKENDS", "launch", "supported", "WARP_SIZE", "BlockState", "Ctx",
-    "KernelDef", "UnsupportedKernel", "Policy", "Stream",
+    "BACKENDS", "Backend", "BlockState", "Ctx", "Dim3", "Event",
+    "KernelDef", "LaunchConfig", "Policy", "Runtime", "Stream",
+    "UnknownBackend", "UnsupportedKernel", "WARP_SIZE", "backend_names",
+    "cache_clear", "coverage", "get_backend", "launch", "register_backend",
+    "supported", "unregister_backend",
 ]

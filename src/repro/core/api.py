@@ -1,4 +1,4 @@
-"""Kernel-launch API: ``launch(kernel, <<<grid, block, dyn_shared>>>, args)``.
+"""Kernel-launch API: ``kernel[<<<grid, block, dyn_shared, stream>>>](args)``.
 
 Launch configurations are JIT-specialized per (kernel, backend, grid, block,
 grain, shapes) - the same choice POCL makes ("replaces these variables with
@@ -6,89 +6,210 @@ actual values during the kernel launch... makes MPMD kernels easy to
 optimize", paper SVII-A.1); the compiled-launch cache plays the role of
 CuPBoP's once-per-program thread pool: one expensive setup, then cheap
 launches.
+
+Two equivalent entry points:
+
+* triple-chevron (CUDA-shaped): ``kernel[grid, block](**buffers)`` where
+  ``grid``/``block`` are ints or up-to-3-tuples (``dim3``), with optional
+  ``dyn_shared`` and ``stream`` slots - ``kernel[(gx, gy), (bx, by), shmem,
+  stream]`` mirrors ``kernel<<<dim3(gx,gy), dim3(bx,by), shmem, stream>>>``;
+* keyword (legacy): ``launch(kernel, grid=..., block=..., args=...)`` - a
+  thin shim over the same path.
+
+Backends come from the open registry in :mod:`repro.core.backends`; the
+compiled-launch cache is weak-keyed on the kernel so entries die with their
+``KernelDef`` (and ``cache_clear()`` resets it for benchmarks).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+import weakref
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as backends_mod
 from repro.core import grain as grain_mod
-from repro.core import lower_loop, lower_vector, pallas_emit, packing
+from repro.core import packing
+from repro.core.backends import backend_names, get_backend, register_backend
+from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef, UnsupportedKernel
 
-BACKENDS = ("loop", "loop_nowarp", "naive", "vector", "pallas")
+__all__ = [
+    "BACKENDS", "LaunchConfig", "cache_clear", "cache_size", "coverage",
+    "launch", "register_backend", "supported",
+]
 
-_LAUNCH_CACHE: dict = {}
+# The compiled-launch cache lives ON each kernel (a private dict attached to
+# the KernelDef), so entries die exactly when their kernel does - the seed
+# keyed a global dict on id(kernel), which can collide after a KernelDef is
+# garbage-collected.  A WeakKeyDictionary would not fix that: the cached
+# jitted fn closes over the kernel, and weak-key mappings hold values
+# strongly, so the value->key edge would pin every entry forever.  Attached
+# to the kernel, kernel -> cache -> jitted fn -> kernel is a pure cycle the
+# GC collects.  The WeakSet only enumerates kernels for cache_clear().
+_CACHE_ATTR = "_launch_cache"
+_CACHED_KERNELS: "weakref.WeakSet[KernelDef]" = weakref.WeakSet()
 
 
-def _build(kernel: KernelDef, backend: str, grid: int, block: int,
+def __getattr__(name: str):
+    if name == "BACKENDS":  # legacy frozen tuple, now a registry snapshot
+        return backend_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _kernel_cache(kernel: KernelDef) -> dict:
+    cache = getattr(kernel, _CACHE_ATTR, None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(kernel, _CACHE_ATTR, cache)  # frozen dataclass
+        _CACHED_KERNELS.add(kernel)
+    return cache
+
+
+def cache_clear() -> None:
+    """Drop all compiled launches (benchmark isolation)."""
+    for k in list(_CACHED_KERNELS):
+        getattr(k, _CACHE_ATTR, {}).clear()
+
+
+def cache_size() -> int:
+    return sum(len(getattr(k, _CACHE_ATTR, {})) for k in _CACHED_KERNELS)
+
+
+def _build(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
            grain: int, dyn_shared, treedef, interpret: bool):
+    entry = get_backend(backend)
+
     def fn(*leaves):
         glob = packing.unpack(leaves, treedef)  # kernel prologue (SIII-C.2)
-        if backend == "loop":
-            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
-                                  grain=grain, dyn_shared=dyn_shared)
-        if backend == "loop_nowarp":
-            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
-                                  grain=grain, dyn_shared=dyn_shared,
-                                  allow_warp=False)
-        if backend == "naive":
-            return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
-                                  grain=grain, dyn_shared=dyn_shared,
-                                  allow_fission=False, allow_warp=False)
-        if backend == "vector":
-            return lower_vector.run(kernel, grid=grid, block=block, glob=glob,
-                                    grain=grain, dyn_shared=dyn_shared)
-        if backend == "pallas":
-            return pallas_emit.run(kernel, grid=grid, block=block, glob=glob,
-                                   grain=grain, dyn_shared=dyn_shared,
-                                   interpret=interpret)
-        raise ValueError(f"unknown backend {backend!r}")
+        return entry.run(kernel, grid=grid, block=block, glob=glob,
+                         grain=grain, dyn_shared=dyn_shared,
+                         interpret=interpret)
 
     return jax.jit(fn)
 
 
-def launch(kernel: KernelDef, *, grid: int, block: int, args: dict,
+def _resolve_grain(kernel: KernelDef, grain, pool, n_blocks: int) -> int:
+    if isinstance(grain, str):
+        pool = pool or jax.device_count()
+        if grain == "average":
+            grain = grain_mod.average_grain(n_blocks, pool)
+        elif grain == "aggressive":
+            grain = grain_mod.heuristic_grain(n_blocks, pool,
+                                              kernel.est_block_work)
+        else:
+            raise ValueError(f"unknown grain policy {grain!r}")
+    return max(1, min(int(grain), n_blocks))
+
+
+def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
+            backend: str, grain, dyn_shared, interpret: bool,
+            pool) -> dict:
+    grain = _resolve_grain(kernel, grain, pool, grid.size)
+    leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
+    key = (
+        backend, grid, block, grain, dyn_shared, interpret, treedef,
+        tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves),
+    )
+    per_kernel = _kernel_cache(kernel)
+    if key not in per_kernel:
+        # surface UnsupportedKernel eagerly (coverage probes rely on this)
+        probe = _build(kernel, backend, grid, block, grain, dyn_shared,
+                       treedef, interpret)
+        jax.eval_shape(probe, *leaves)
+        per_kernel[key] = probe
+    return per_kernel[key](*leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchConfig:
+    """A kernel bound to its ``<<<grid, block, dyn_shared, stream>>>``.
+
+    Calling it launches: buffers go in as keyword arguments (or one
+    positional dict) and the updated buffer dict comes back.  Execution
+    options that CUDA keeps out of the chevrons (backend, grain, interpret)
+    are set with :meth:`on`, which returns a re-bound config::
+
+        out = kernel[(gx, gy), (bx, by)].on(backend="pallas")(x=x, y=y)
+
+    When a ``stream`` occupies the fourth chevron slot the launch is routed
+    through ``stream.launch`` (async, hazard-tracked) and returns the
+    stream; otherwise it is a synchronous ``api`` launch returning the
+    updated buffers.
+    """
+
+    kernel: KernelDef
+    grid: Dim3
+    block: Dim3
+    dyn_shared: int | None = None
+    stream: Any = None
+    backend: str = "vector"
+    grain: int | str = 1
+    interpret: bool = True
+    pool: int | None = None
+
+    @classmethod
+    def from_chevron(cls, kernel: KernelDef, config: tuple) -> "LaunchConfig":
+        grid, block, *rest = config
+        dyn_shared = rest[0] if len(rest) >= 1 else None
+        stream = rest[1] if len(rest) >= 2 else None
+        if dyn_shared is not None and not isinstance(dyn_shared, int):
+            raise TypeError(
+                f"kernel {kernel.name}: third chevron slot (dyn_shared) must "
+                f"be an int or None, got {dyn_shared!r}")
+        return cls(kernel=kernel, grid=Dim3.of(grid), block=Dim3.of(block),
+                   dyn_shared=dyn_shared, stream=stream)
+
+    def on(self, **overrides) -> "LaunchConfig":
+        """Re-bind execution options: backend, grain, interpret, pool."""
+        allowed = {"backend", "grain", "interpret", "pool"}
+        bad = set(overrides) - allowed
+        if bad:
+            raise TypeError(f"LaunchConfig.on() got unexpected options "
+                            f"{sorted(bad)}; allowed: {sorted(allowed)}")
+        return dataclasses.replace(self, **overrides)
+
+    def __call__(self, args: dict | None = None, /, **buffers):
+        merged = {**(args or {}), **buffers}
+        if self.stream is not None:
+            self.stream.launch(
+                self.kernel, grid=self.grid, block=self.block,
+                backend=self.backend, grain=self.grain,
+                dyn_shared=self.dyn_shared,
+                args=merged or None,
+                interpret=self.interpret, pool=self.pool)
+            return self.stream
+        return _launch(self.kernel, self.grid, self.block, merged,
+                       self.backend, self.grain, self.dyn_shared,
+                       self.interpret, self.pool)
+
+
+def launch(kernel: KernelDef, *, grid, block, args: dict,
            backend: str = "vector", grain: int | str = 1,
            dyn_shared: int | None = None, interpret: bool = True,
            pool: int | None = None) -> dict:
     """Launch ``kernel`` over ``grid`` blocks of ``block`` threads.
 
-    ``args`` maps global-buffer names to arrays; returns the dict with the
-    kernel's written buffers replaced.  ``grain`` may be an int, "average",
-    or "aggressive" (paper SIV-A heuristics; ``pool`` = worker count).
+    Legacy keyword shim over the :class:`LaunchConfig` path; ``grid`` and
+    ``block`` accept ints or up-to-3-tuples (CUDA ``dim3``).  ``args`` maps
+    global-buffer names to arrays; returns the dict with the kernel's
+    written buffers replaced.  ``grain`` may be an int, "average", or
+    "aggressive" (paper SIV-A heuristics; ``pool`` = worker count).
     """
-    if isinstance(grain, str):
-        pool = pool or jax.device_count()
-        if grain == "average":
-            grain = grain_mod.average_grain(grid, pool)
-        elif grain == "aggressive":
-            grain = grain_mod.heuristic_grain(grid, pool,
-                                              kernel.est_block_work)
-        else:
-            raise ValueError(f"unknown grain policy {grain!r}")
-    grain = max(1, min(int(grain), grid))
-
-    leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
-    key = (
-        id(kernel), backend, grid, block, grain, dyn_shared, interpret,
-        treedef, tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves),
-    )
-    if key not in _LAUNCH_CACHE:
-        # surface UnsupportedKernel eagerly (coverage probes rely on this)
-        probe = _build(kernel, backend, grid, block, grain, dyn_shared,
-                       treedef, interpret)
-        jax.eval_shape(probe, *leaves)
-        _LAUNCH_CACHE[key] = probe
-    return _LAUNCH_CACHE[key](*leaves)
+    return _launch(kernel, Dim3.of(grid), Dim3.of(block), args, backend,
+                   grain, dyn_shared, interpret, pool)
 
 
 def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,
               args=None, dyn_shared=None) -> bool:
-    """Coverage probe: can ``backend`` express ``kernel``? (Table II cell)."""
+    """Coverage probe: can ``backend`` express ``kernel``? (Table II cell).
+
+    ``backend`` must name a registered backend - unknown names raise
+    ``UnknownBackend`` rather than reading as "unsupported".
+    """
+    get_backend(backend)  # raise eagerly on unknown names
     try:
         if args is None:
             raise ValueError("supported() needs representative args")
@@ -97,3 +218,13 @@ def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,
         return True
     except UnsupportedKernel:
         return False
+
+
+def coverage(kernel: KernelDef, *, grid=4, block=64, args=None,
+             dyn_shared=None) -> dict[str, bool]:
+    """One Table-II row: ``supported()`` across every registered backend."""
+    return {
+        name: supported(kernel, name, grid=grid, block=block, args=args,
+                        dyn_shared=dyn_shared)
+        for name in backends_mod.backend_names()
+    }

@@ -1,0 +1,122 @@
+"""Pluggable backend registry for kernel lowerings.
+
+The seed hard-coded its lowerings in an if/elif chain inside ``api._build``
+and froze the set in a ``BACKENDS`` tuple - which meant coverage probes,
+benchmarks, and ``supported()`` could never see a backend added after the
+fact.  POCL's device abstraction (paper SVII-A) and CuPBoP's own
+NVIDIA/AMD/Intel portability story both argue for the opposite: the set of
+targets is open.  This module is that open set.
+
+A *backend* is a name plus a builder with the uniform lowering signature::
+
+    builder(kernel, *, grid: Dim3, block: Dim3, glob, grain, dyn_shared,
+            interpret) -> new glob dict
+
+plus a set of capability tags used by coverage reporting (the analogue of a
+row in the paper's Table II):
+
+* ``"barrier"`` - can split at ``__syncthreads`` (loop fission);
+* ``"warp"``    - supports warp-level shuffles/votes;
+* ``"dim3"``    - accepts multi-dimensional grids/blocks (all builtins do,
+  since they iterate linearized ids).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+
+class UnknownBackend(KeyError):
+    """Raised when a launch names a backend that was never registered."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered lowering: ``run`` has the uniform builder signature."""
+
+    name: str
+    run: Callable
+    capabilities: frozenset[str] = frozenset()
+
+    def supports(self, *caps: str) -> bool:
+        return all(c in self.capabilities for c in caps)
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, builder: Callable,
+                     capabilities: Iterable[str] = (),
+                     *, overwrite: bool = False) -> Backend:
+    """Register ``builder`` under ``name``; returns the ``Backend`` entry.
+
+    Registering an existing name raises unless ``overwrite=True`` so typos
+    don't silently shadow a builtin.
+    """
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"backend {name!r} already registered; pass overwrite=True to "
+            f"replace it")
+    entry = Backend(name=name, run=builder,
+                    capabilities=frozenset(capabilities))
+    _REGISTRY[name] = entry
+    return entry
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackend(
+            f"unknown backend {name!r}; registered: {backend_names()}"
+        ) from None
+
+
+def backend_names() -> tuple[str, ...]:
+    """All registered backend names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Builtin backends.  Each builder adapts one lowering module to the uniform
+# signature (the lowerings themselves stay import-light and registry-free).
+# --------------------------------------------------------------------------
+def _register_builtins() -> None:
+    from repro.core import lower_loop, lower_vector, pallas_emit
+
+    def loop(kernel, *, grid, block, glob, grain, dyn_shared, interpret):
+        return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                              grain=grain, dyn_shared=dyn_shared)
+
+    def loop_nowarp(kernel, *, grid, block, glob, grain, dyn_shared,
+                    interpret):
+        return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                              grain=grain, dyn_shared=dyn_shared,
+                              allow_warp=False)
+
+    def naive(kernel, *, grid, block, glob, grain, dyn_shared, interpret):
+        return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
+                              grain=grain, dyn_shared=dyn_shared,
+                              allow_fission=False, allow_warp=False)
+
+    def vector(kernel, *, grid, block, glob, grain, dyn_shared, interpret):
+        return lower_vector.run(kernel, grid=grid, block=block, glob=glob,
+                                grain=grain, dyn_shared=dyn_shared)
+
+    def pallas(kernel, *, grid, block, glob, grain, dyn_shared, interpret):
+        return pallas_emit.run(kernel, grid=grid, block=block, glob=glob,
+                               grain=grain, dyn_shared=dyn_shared,
+                               interpret=interpret)
+
+    register_backend("loop", loop, {"barrier", "warp", "dim3"})
+    register_backend("loop_nowarp", loop_nowarp, {"barrier", "dim3"})
+    register_backend("naive", naive, {"dim3"})
+    register_backend("vector", vector, {"barrier", "warp", "dim3"})
+    register_backend("pallas", pallas, {"barrier", "warp", "dim3"})
+
+
+_register_builtins()

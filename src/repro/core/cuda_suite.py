@@ -236,6 +236,50 @@ def make_stencil1d(n: int, block: int) -> KernelDef:
 
 
 # --------------------------------------------------------------------------
+# stencil2d (hotspot-style 5-point stencil; 2-D grid x 2-D block via dim3)
+# --------------------------------------------------------------------------
+def make_stencil2d(h: int, w: int, tile_y: int = 8,
+                   tile_x: int = 8) -> KernelDef:
+    """Rodinia-hotspot-shaped kernel: ``blockIdx``/``threadIdx`` are genuinely
+    2-D (read through ``ctx.bid3``/``ctx.tid3``), with a shared halo tile."""
+
+    def load(ctx, st):
+        tx, ty, _ = ctx.tid3
+        bx, by, _ = ctx.bid3
+        row, col = by * tile_y + ty, bx * tile_x + tx
+        x = st.glob["x"]
+        at = lambda r, c: x[jnp.clip(r, 0, h - 1), jnp.clip(c, 0, w - 1)]
+        s = st.shared["s"].at[ty + 1, tx + 1].set(at(row, col))
+        # boundary threads fetch the four halo edges
+        s = s.at[jnp.where(ty == 0, 0, OOB), tx + 1].set(
+            at(row - 1, col), mode="drop")
+        s = s.at[jnp.where(ty == tile_y - 1, tile_y + 1, OOB), tx + 1].set(
+            at(row + 1, col), mode="drop")
+        s = s.at[ty + 1, jnp.where(tx == 0, 0, OOB)].set(
+            at(row, col - 1), mode="drop")
+        s = s.at[ty + 1, jnp.where(tx == tile_x - 1, tile_x + 1, OOB)].set(
+            at(row, col + 1), mode="drop")
+        return st.set_shared(s=s)
+
+    def compute(ctx, st):
+        tx, ty, _ = ctx.tid3
+        bx, by, _ = ctx.bid3
+        row, col = by * tile_y + ty, bx * tile_x + tx
+        s = st.shared["s"]
+        val = 0.2 * (s[ty + 1, tx + 1] + s[ty, tx + 1] + s[ty + 2, tx + 1]
+                     + s[ty + 1, tx] + s[ty + 1, tx + 2])
+        idx = jnp.where((row < h) & (col < w), row, OOB)
+        y = st.glob["y"].at[idx, col].set(val, mode="drop")
+        return st.set_glob(y=y)
+
+    return KernelDef(
+        "stencil2d", (load, compute), writes=("y",),
+        shared={"s": ((tile_y + 2, tile_x + 2), jnp.float32)},
+        est_block_work=tile_y * tile_x * 10.0,
+    )
+
+
+# --------------------------------------------------------------------------
 # softmax_row: one block per row, two barriers (max then sum)
 # --------------------------------------------------------------------------
 def make_softmax_row(block: int) -> KernelDef:
@@ -341,8 +385,8 @@ class SuiteEntry:
     name: str
     features: tuple[str, ...]
     kernel: KernelDef
-    grid: int
-    block: int
+    grid: int | tuple            # CUDA dim3: int or up-to-3-tuple
+    block: int | tuple
     dyn_shared: int | None
     make_args: Callable[[np.random.Generator], dict]
     reference: Callable[[dict], dict]
@@ -417,6 +461,21 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                          + 0.5 * a["x"]
                          + 0.25 * a["x"][np.clip(np.arange(st_n) + 1, None,
                                                  st_n - 1)])},
+    ))
+
+    sh, sw = 32, 64 * scale
+
+    def _stencil2d_ref(a):
+        p = np.pad(a["x"], 1, mode="edge")
+        return {"y": 0.2 * (p[1:-1, 1:-1] + p[:-2, 1:-1] + p[2:, 1:-1]
+                            + p[1:-1, :-2] + p[1:-1, 2:])}
+
+    entries.append(SuiteEntry(
+        "stencil2d", ("barrier", "dim3"), make_stencil2d(sh, sw),
+        (sw // 8, sh // 8), (8, 8), None,
+        lambda r: {"x": r.standard_normal((sh, sw), dtype=np.float32),
+                   "y": np.zeros((sh, sw), np.float32)},
+        _stencil2d_ref,
     ))
 
     rows = 32 * scale

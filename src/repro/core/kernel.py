@@ -32,6 +32,8 @@ from typing import Any, Callable, Mapping, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.dim3 import Dim3
+
 WARP_SIZE = 32
 
 
@@ -74,14 +76,42 @@ class Ctx:
     (block_index / thread id, SIII-B.2): they are *not* hardware registers on
     the target, so CuPBoP materializes them explicitly - here they are traced
     values fed by the lowering.
+
+    ``bid``/``tid`` stay *linearized* (every lowering iterates linear ids),
+    while ``bid3``/``tid3`` recover CUDA's ``blockIdx``/``threadIdx`` triples
+    from the ``Dim3`` launch geometry with x-fastest ordering, so 2-D/3-D
+    kernels (hotspot/srad-style stencils) read their coordinates exactly as
+    the CUDA source does.
     """
 
-    bid: Any                 # scalar int32 block id
+    bid: Any                 # scalar int32 block id (linearized)
     tid: Any                 # [chunk] int32 thread ids within the block
     block_dim: int           # python int (POCL-style JIT specialization)
     grid_dim: Any            # int or traced scalar
     backend: str             # 'loop' | 'vector' | 'pallas'
     uses_warp: bool = False
+    block_dim3: Dim3 | None = None   # CUDA blockDim (defaults to 1-D)
+    grid_dim3: Dim3 | None = None    # CUDA gridDim (defaults to 1-D)
+
+    def __post_init__(self):
+        if self.block_dim3 is None:
+            self.block_dim3 = Dim3(int(self.block_dim))
+        if self.grid_dim3 is None:
+            g = self.grid_dim
+            # traced grid extent: treat as 1-D (x wide enough that
+            # coords() degenerates to (bid, 0, 0))
+            self.grid_dim3 = (Dim3(int(g)) if isinstance(g, int)
+                              else Dim3(1 << 30))
+
+    @property
+    def tid3(self):
+        """``threadIdx`` as an ``(x, y, z)`` triple of [chunk] arrays."""
+        return self.block_dim3.coords(self.tid)
+
+    @property
+    def bid3(self):
+        """``blockIdx`` as an ``(x, y, z)`` triple of scalars."""
+        return self.grid_dim3.coords(self.bid)
 
     @property
     def lane(self):
@@ -154,6 +184,15 @@ class KernelDef:
     stream runtime for implicit-barrier insertion (Listing 4).
     ``est_block_work`` is the per-block instruction estimate used by the
     aggressive-grain heuristic (Table V '# inst' column).
+
+    Subscripting a kernel is the triple-chevron launch syntax::
+
+        kernel[grid, block](**buffers)                     # <<<g, b>>>
+        kernel[(gx, gy), (bx, by)](**buffers)              # dim3 grids
+        kernel[grid, block, shmem](**buffers)              # <<<g, b, s>>>
+        kernel[grid, block, shmem, stream](**buffers)      # <<<g, b, s, st>>>
+
+    returning a bound :class:`~repro.core.api.LaunchConfig`.
     """
 
     name: str
@@ -164,6 +203,17 @@ class KernelDef:
     )
     uses_warp: bool = False
     est_block_work: float = 1e6
+
+    def __getitem__(self, config):
+        """``kernel[grid, block(, dyn_shared(, stream))]`` -> LaunchConfig."""
+        from repro.core.api import LaunchConfig  # lazy: api imports kernel
+
+        if not isinstance(config, tuple) or not 2 <= len(config) <= 4:
+            raise TypeError(
+                f"kernel {self.name}: launch config must be "
+                f"[grid, block(, dyn_shared(, stream))]; got {config!r}"
+            )
+        return LaunchConfig.from_chevron(self, config)
 
     def resolved_shared(self, dyn_shared: int | None):
         out = {}

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.dim3 import Dim3
 from repro.core.kernel import (
     WARP_SIZE,
     BlockState,
@@ -37,13 +38,16 @@ from repro.core.kernel import (
 
 
 def _make_ctx(bid, tid, block, grid, uses_warp):
+    """``block``/``grid`` are Dim3; the loops iterate their linear sizes."""
     return Ctx(
         bid=bid,
         tid=tid,
-        block_dim=block,
-        grid_dim=grid,
+        block_dim=block.size,
+        grid_dim=grid.size,
         backend="loop",
         uses_warp=uses_warp,
+        block_dim3=block,
+        grid_dim3=grid,
     )
 
 
@@ -54,7 +58,8 @@ def _stage_loop(stage, stage_idx, kernel, bid, block, grid, chunk,
     ``priv_in`` is the demoted [block, ...] pytree from the previous stage
     (None for stage 0).  Returns (priv_out demoted, shared, glob).
     """
-    n_chunks = block // chunk
+    block_size = block.size
+    n_chunks = block_size // chunk
 
     def chunk_ids(c):
         return c * chunk + jnp.arange(chunk, dtype=jnp.int32)
@@ -77,7 +82,8 @@ def _stage_loop(stage, stage_idx, kernel, bid, block, grid, chunk,
     check_priv_chunk(out_struct.priv, chunk, kernel.name, stage_idx)
 
     priv_out = jax.tree.map(
-        lambda s: jnp.zeros((block,) + s.shape[1:], s.dtype), out_struct.priv
+        lambda s: jnp.zeros((block_size,) + s.shape[1:], s.dtype),
+        out_struct.priv
     )
 
     def body(c, carry):
@@ -105,7 +111,12 @@ def _stage_loop(stage, stage_idx, kernel, bid, block, grid, chunk,
 
 def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None,
               allow_fission=True, allow_warp=True):
-    """Execute one CUDA block under the loop lowering. Returns updated glob."""
+    """Execute one CUDA block under the loop lowering. Returns updated glob.
+
+    ``block``/``grid`` may be ints, dim3 tuples, or ``Dim3``; threads are
+    iterated in linearized (x-fastest) order.
+    """
+    block, grid = Dim3.of(block), Dim3.of(grid)
     if len(kernel.stages) > 1 and not allow_fission:
         raise UnsupportedKernel(
             f"kernel {kernel.name}: __syncthreads requires loop fission "
@@ -117,9 +128,10 @@ def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None,
             f"lowering (cf. Table II, Crystal q11-q13)"
         )
     chunk = WARP_SIZE if kernel.uses_warp else 1
-    if block % chunk != 0:
+    if block.size % chunk != 0:
         raise UnsupportedKernel(
-            f"kernel {kernel.name}: block {block} not a multiple of {chunk}"
+            f"kernel {kernel.name}: block {block.size} not a multiple of "
+            f"{chunk}"
         )
     shared = kernel.init_shared(dyn_shared)
     priv = None
@@ -133,7 +145,9 @@ def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None,
 def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
         allow_fission=True, allow_warp=True):
     """Full launch: fetch-loop x grain-loop over blocks (paper Fig. 5/6)."""
-    n_fetch = -(-grid // grain)
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    n_blocks = grid.size
+    n_fetch = -(-n_blocks // grain)
 
     def run_bid(bid, g):
         return run_block(
@@ -145,7 +159,7 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
     def fetch_body(f, g):
         def grain_body(i, g_):
             bid = f * grain + i
-            return lax.cond(bid < grid, lambda x: run_bid(bid, x),
+            return lax.cond(bid < n_blocks, lambda x: run_bid(bid, x),
                             lambda x: x, g_)
         return lax.fori_loop(0, grain, grain_body, g)
 

@@ -17,32 +17,39 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.dim3 import Dim3
 from repro.core.kernel import BlockState, Ctx, KernelDef, check_priv_chunk
 
 
 def _make_ctx(bid, block, grid):
+    """``block``/``grid`` are Dim3; the thread axis is their linear size."""
     return Ctx(
         bid=bid,
-        tid=jnp.arange(block, dtype=jnp.int32),
-        block_dim=block,
-        grid_dim=grid,
+        tid=jnp.arange(block.size, dtype=jnp.int32),
+        block_dim=block.size,
+        grid_dim=grid.size,
         backend="vector",
         uses_warp=True,  # warp ops always expressible on the vector axis
+        block_dim3=block,
+        grid_dim3=grid,
     )
 
 
 def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None):
+    block, grid = Dim3.of(block), Dim3.of(grid)
     shared = kernel.init_shared(dyn_shared)
     st = BlockState(priv={}, shared=shared, glob=glob)
     ctx = _make_ctx(bid, block, grid)
     for si, stage in enumerate(kernel.stages):
         st = stage(ctx, st)
-        check_priv_chunk(st.priv, block, kernel.name, si)
+        check_priv_chunk(st.priv, block.size, kernel.name, si)
     return st.glob
 
 
 def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None):
-    n_fetch = -(-grid // grain)
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    n_blocks = grid.size
+    n_fetch = -(-n_blocks // grain)
 
     def run_bid(bid, g):
         return run_block(kernel, bid, block=block, grid=grid, glob=g,
@@ -51,7 +58,7 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None):
     def fetch_body(f, g):
         def grain_body(i, g_):
             bid = f * grain + i
-            return lax.cond(bid < grid, lambda x: run_bid(bid, x),
+            return lax.cond(bid < n_blocks, lambda x: run_bid(bid, x),
                             lambda x: x, g_)
         return lax.fori_loop(0, grain, grain_body, g)
 

@@ -27,15 +27,18 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.dim3 import Dim3
 from repro.core.kernel import BlockState, Ctx, KernelDef
 
 
 def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
         interpret=True):
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    n_blocks, block_size = grid.size, block.size
     names = sorted(glob.keys())
     written = [n for n in names if n in set(kernel.writes)]
     read_only = [n for n in names if n not in set(kernel.writes)]
-    n_steps = -(-grid // grain)
+    n_steps = -(-n_blocks // grain)
 
     def body(*refs):
         in_refs = dict(zip(read_only + written, refs[: len(names)]))
@@ -55,11 +58,12 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
             g[n] = out_refs[n][...]
 
         shared0 = kernel.init_shared(dyn_shared)
-        ctx_tid = jnp.arange(block, dtype=jnp.int32)
+        ctx_tid = jnp.arange(block_size, dtype=jnp.int32)
 
         def run_bid(bid, g_):
-            ctx = Ctx(bid=bid, tid=ctx_tid, block_dim=block, grid_dim=grid,
-                      backend="pallas", uses_warp=True)
+            ctx = Ctx(bid=bid, tid=ctx_tid, block_dim=block_size,
+                      grid_dim=n_blocks, backend="pallas", uses_warp=True,
+                      block_dim3=block, grid_dim3=grid)
             st = BlockState(priv={}, shared=shared0, glob=g_)
             for stage in kernel.stages:
                 st = stage(ctx, st)
@@ -67,7 +71,7 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
 
         def grain_body(i, g_):
             bid = step * grain + i
-            return lax.cond(bid < grid, lambda x: run_bid(bid, x),
+            return lax.cond(bid < n_blocks, lambda x: run_bid(bid, x),
                             lambda x: x, g_)
 
         g = lax.fori_loop(0, grain, grain_body, g)

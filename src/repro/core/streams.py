@@ -1,4 +1,4 @@
-"""Stream runtime: async launches + implicit-barrier insertion (paper SIII-C.1, SIV).
+"""Stream runtime: async launches, events, implicit barriers (paper SIII-C.1).
 
 CuPBoP keeps kernel launches asynchronous (the host thread pushes a task and
 continues) and inserts a barrier *only* when a later host operation reads or
@@ -13,17 +13,38 @@ JAX dispatch is already asynchronous, so the "task queue" here tracks
 * ``Policy.SYNC_ALWAYS``  - HIP-CPU baseline: sync after every launch.
 
 ``Stream.stats`` counts launches/syncs for the Fig. 11 benchmark.
+
+Beyond the single-stream seed, a :class:`Runtime` hosts *multiple named
+streams over one buffer heap* plus CUDA-shaped :class:`Event` objects::
+
+    rt = Runtime({"x": x, "y": y, "tmp": t})
+    s0, s1 = rt.stream("compute"), rt.stream("copy")
+    producer[grid, block, None, s0]()           # <<<g, b, 0, s0>>>
+    ev = rt.event("produced")
+    ev.record(s0)                               # cudaEventRecord
+    s1.wait_event(ev)                           # cudaStreamWaitEvent
+    consumer[grid, block, None, s1]()
+    rt.synchronize()                            # cudaDeviceSynchronize
+
+Cross-stream hazards are tracked on the shared heap: a launch (or memcpy)
+touching a buffer whose in-flight writer lives on *another* stream inserts
+a barrier there first - the implicit-barrier analysis of Listing 4 extended
+stream-to-stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
+import threading
+import time
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.core import api
+from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef
 
 
@@ -38,13 +59,111 @@ class StreamStats:
     syncs: int = 0
     barriers_inserted: int = 0
 
+    def __iadd__(self, other: "StreamStats") -> "StreamStats":
+        self.launches += other.launches
+        self.syncs += other.syncs
+        self.barriers_inserted += other.barriers_inserted
+        return self
+
+
+class Event:
+    """A CUDA event: a fence over the work a stream had in flight at record.
+
+    ``record`` captures the recording stream's pending buffers (the array
+    values themselves - later heap updates don't move the fence) and starts
+    a watcher thread that stamps the completion time the moment the fenced
+    work finishes - so ``elapsed`` measures when the *device* work
+    completed (cudaEventElapsedTime), not when the host got around to
+    calling ``synchronize``.
+    """
+
+    def __init__(self, name: str = "event"):
+        self.name = name
+        self._fence: dict[str, Any] = {}
+        self._stream: "Stream | None" = None
+        self._recorded = False
+        self._time: float | None = None
+        self._watcher: threading.Thread | None = None
+        self._error: Exception | None = None
+        self._gen = 0              # guards against stale watcher threads
+
+    def record(self, stream: "Stream") -> "Event":
+        """Snapshot ``stream``'s in-flight writes (cudaEventRecord)."""
+        self._fence = {n: stream.buffers[n] for n in stream._pending}
+        self._stream = stream
+        self._recorded = True
+        self._time = None          # re-record resets completion
+        self._gen += 1
+        self._watcher = threading.Thread(
+            target=self._watch, args=(self._gen, tuple(self._fence.values())),
+            daemon=True)
+        self._watcher.start()
+        return self
+
+    def _watch(self, gen: int, fence: tuple):
+        err = None
+        try:
+            for a in fence:
+                jax.block_until_ready(a)
+        except Exception as e:     # fenced work failed; surface on sync
+            err = e
+        if self._gen == gen:       # a re-record supersedes this watcher
+            self._time = time.perf_counter()
+            self._error = err
+
+    def query(self) -> bool:
+        """True iff all fenced work has finished (cudaEventQuery)."""
+        if not self._recorded:
+            return False
+        return self._time is not None or \
+            all(_is_ready(a) for a in self._fence.values())
+
+    def synchronize(self) -> "Event":
+        """Block until the fenced work completes (cudaEventSynchronize)."""
+        if not self._recorded:
+            raise RuntimeError(f"event {self.name!r} was never recorded")
+        self._watcher.join()
+        if self._error is not None:
+            raise RuntimeError(
+                f"event {self.name!r}: fenced work failed") from self._error
+        return self
+
+    def elapsed(self, later: "Event") -> float:
+        """Milliseconds between this event's completion and ``later``'s
+        (cudaEventElapsedTime; both events must have been recorded)."""
+        self.synchronize()
+        later.synchronize()
+        return (later._time - self._time) * 1e3
+
+
+def _is_ready(a) -> bool:
+    try:
+        return bool(a.is_ready())
+    except AttributeError:
+        jax.block_until_ready(a)
+        return True
+
 
 class Stream:
-    """A CUDA stream over named global buffers."""
+    """A CUDA stream over named global buffers.
+
+    Standalone (the seed API) it owns a private heap; created through a
+    :class:`Runtime` it shares the runtime's heap and participates in
+    cross-stream hazard tracking.
+    """
 
     def __init__(self, buffers: dict[str, Any] | None = None,
-                 policy: Policy = Policy.HAZARD_ONLY):
-        self.buffers: dict[str, Any] = dict(buffers or {})
+                 policy: Policy = Policy.HAZARD_ONLY,
+                 *, name: str = "stream0",
+                 runtime: "Runtime | None" = None):
+        self.name = name
+        self.runtime = runtime
+        if runtime is not None:
+            self.buffers = runtime.buffers      # shared heap (same object)
+            if buffers:
+                self.buffers.update(buffers)
+        else:
+            self.buffers = dict(buffers or {})
         self.policy = policy
         self._pending: set[str] = set()   # buffers with an in-flight writer
         self.stats = StreamStats()
@@ -65,21 +184,98 @@ class Stream:
         return np.asarray(jax.device_get(self.buffers[name]))
 
     # -- kernel launch (async; Fig. 5) ---------------------------------------
-    def launch(self, kernel: KernelDef, *, grid: int, block: int,
+    def launch(self, kernel: KernelDef, *, grid, block,
                backend: str = "vector", grain: int | str = 1,
                dyn_shared: int | None = None,
-               args: dict[str, Any] | None = None):
-        buf_args = {n: self.buffers[n] for n in (args or self.buffers)}
+               args: dict[str, Any] | None = None,
+               interpret: bool = True, pool: int | None = None):
+        """Async launch over the stream's heap.
+
+        The kernel always sees the full heap (device memory); a non-None
+        value in ``args`` is written to the heap first (an implicit
+        ``memcpy_h2d``, with the usual hazard ordering), so
+        ``kernel[g, b, None, s](a=x)`` computes on ``x`` and the heap's
+        other buffers - not on whatever the heap last held for ``a``.
+        """
+        grid, block = Dim3.of(grid), Dim3.of(block)
+        if args:
+            missing = [n for n in args if n not in self.buffers]
+            if missing:
+                raise KeyError(
+                    f"stream {self.name!r}: no buffer(s) {missing} on the "
+                    f"heap; malloc/memcpy_h2d first (typo'd name?)")
+            updates = {n: v for n, v in args.items() if v is not None}
+            if updates:
+                self._barrier_if_hazard(set(updates))
+                self.buffers.update(updates)
+        buf_args = dict(self.buffers)
+        # order after in-flight writers of touched buffers on OTHER streams
+        self._wait_foreign_writers(set(buf_args) | set(kernel.writes))
         new = api.launch(kernel, grid=grid, block=block, args=buf_args,
-                         backend=backend, grain=grain, dyn_shared=dyn_shared)
+                         backend=backend, grain=grain, dyn_shared=dyn_shared,
+                         interpret=interpret, pool=pool)
         self.buffers.update({n: new[n] for n in kernel.writes})
-        self._pending.update(kernel.writes)
+        self._mark_pending(kernel.writes)
         self.stats.launches += 1
         if self.policy is Policy.SYNC_ALWAYS:
             self.synchronize()
 
+    # -- events ---------------------------------------------------------------
+    def record(self, event: Event | None = None) -> Event:
+        """Record ``event`` on this stream (cudaEventRecord); creates one
+        when called bare."""
+        return (event or Event()).record(self)
+
+    def wait_event(self, event: Event):
+        """cudaStreamWaitEvent: order this stream after ``event``.
+
+        With JAX's dataflow ordering the wait is a hazard edge, not a hard
+        stall: it only blocks (and only counts a barrier) when the fenced
+        work is still in flight on the recording stream.  The fence is the
+        *snapshot taken at record time* - work launched on the source
+        stream after the record is not waited on (and stays pending there).
+        """
+        if not event._recorded:
+            raise RuntimeError(
+                f"stream {self.name!r} cannot wait on unrecorded event "
+                f"{event.name!r}")
+        src = event._stream
+        if src is None or src is self:
+            return  # same-stream wait: program order already serializes
+        # pending buffers whose in-flight writer IS the recorded snapshot
+        fenced = {n for n, a in event._fence.items()
+                  if n in src._pending and src.buffers.get(n) is a}
+        superseded = [a for n, a in event._fence.items() if n not in fenced]
+        if fenced:
+            self.stats.barriers_inserted += 1
+            src._sync_buffers(fenced)
+        for a in superseded:
+            # a later launch re-wrote the buffer: wait on the snapshot
+            # itself without clearing the newer writer's pending state
+            jax.block_until_ready(a)
+
     # -- synchronization ------------------------------------------------------
+    def _mark_pending(self, names):
+        self._pending.update(names)
+        if self.runtime is not None:
+            for n in names:
+                self.runtime._writers[n] = self
+
+    def _wait_foreign_writers(self, touched: set[str]):
+        """Cross-stream implicit barrier (Listing 4, stream-to-stream)."""
+        if self.runtime is None:
+            return
+        by_owner: dict[Stream, set[str]] = {}
+        for n in touched:
+            owner = self.runtime._writers.get(n)
+            if owner is not None and owner is not self and n in owner._pending:
+                by_owner.setdefault(owner, set()).add(n)
+        for owner, names in by_owner.items():
+            self.stats.barriers_inserted += 1
+            owner._sync_buffers(names)
+
     def _barrier_if_hazard(self, touched: set[str]):
+        self._wait_foreign_writers(touched)
         if self.policy is Policy.SYNC_ALWAYS:
             self.synchronize()
             return
@@ -92,11 +288,77 @@ class Stream:
         for n in names:
             jax.block_until_ready(self.buffers[n])
         self._pending -= set(names)
+        if self.runtime is not None:
+            for n in names:
+                if self.runtime._writers.get(n) is self:
+                    del self.runtime._writers[n]
         self.stats.syncs += 1
 
     def synchronize(self):
-        """cudaDeviceSynchronize."""
-        for n in list(self._pending) or list(self.buffers):
-            jax.block_until_ready(self.buffers[n])
-        self._pending.clear()
-        self.stats.syncs += 1
+        """cudaStreamSynchronize: no-op when nothing is in flight (the seed
+        blocked on every buffer and counted a sync even with an empty
+        pending set, skewing the Fig. 11 launch/sync ratios)."""
+        if not self._pending:
+            return
+        self._sync_buffers(set(self._pending))
+
+
+class Runtime:
+    """A device context: one buffer heap, many named streams, events.
+
+    The CUDA-shaped entry point for multi-stream programs; single-stream
+    code can keep using a bare :class:`Stream`.
+    """
+
+    def __init__(self, buffers: dict[str, Any] | None = None,
+                 policy: Policy = Policy.HAZARD_ONLY):
+        self.policy = policy
+        self.buffers: dict[str, Any] = dict(buffers or {})
+        self._writers: dict[str, Stream] = {}   # buffer -> in-flight writer
+        self._streams: dict[str, Stream] = {}
+        self._event_ids = itertools.count()
+
+    # -- streams --------------------------------------------------------------
+    def stream(self, name: str = "default") -> Stream:
+        """Get-or-create the named stream (cudaStreamCreate)."""
+        if name not in self._streams:
+            self._streams[name] = Stream(policy=self.policy, name=name,
+                                         runtime=self)
+        return self._streams[name]
+
+    @property
+    def streams(self) -> tuple[Stream, ...]:
+        return tuple(self._streams.values())
+
+    @property
+    def default(self) -> Stream:
+        return self.stream("default")
+
+    # -- events ---------------------------------------------------------------
+    def event(self, name: str | None = None) -> Event:
+        """cudaEventCreate."""
+        return Event(name or f"event{next(self._event_ids)}")
+
+    # -- memory (default-stream semantics, as in CUDA's NULL stream) ----------
+    def malloc(self, name: str, shape, dtype):
+        return self.default.malloc(name, shape, dtype)
+
+    def memcpy_h2d(self, name: str, host: np.ndarray):
+        self.default.memcpy_h2d(name, host)
+
+    def memcpy_d2h(self, name: str) -> np.ndarray:
+        return self.default.memcpy_d2h(name)
+
+    # -- synchronization ------------------------------------------------------
+    def synchronize(self):
+        """cudaDeviceSynchronize: drain every stream."""
+        for s in self._streams.values():
+            s.synchronize()
+
+    @property
+    def stats(self) -> StreamStats:
+        """Aggregate launch/sync/barrier counts across all streams."""
+        total = StreamStats()
+        for s in self._streams.values():
+            total += s.stats
+        return total

@@ -12,12 +12,10 @@ tested for exactness bounds + EF accumulation in tests/test_distributed.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def quantize(g, bits: int = 8):

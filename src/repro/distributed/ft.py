@@ -19,7 +19,7 @@ import dataclasses
 import os
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable
 
 
 class Heartbeat:

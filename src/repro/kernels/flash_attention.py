@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -112,7 +114,7 @@ def flash_attention(q, k, v, *, causal=True, q_blk=128, kv_blk=128,
             pltpu.VMEM((q_blk,), jnp.float32),         # running denom
             pltpu.VMEM((q_blk, d), jnp.float32),       # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

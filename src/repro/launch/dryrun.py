@@ -22,14 +22,13 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", ""))
 
 import argparse          # noqa: E402
-import dataclasses       # noqa: E402
 import json              # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
+from repro import compat                              # noqa: E402
 from repro.configs import registry                    # noqa: E402
 from repro.configs.registry import SHAPES             # noqa: E402
 from repro.distributed import sharding as shd         # noqa: E402
@@ -196,7 +195,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         }
         rec["memory"]["fits_16gb_hbm"] = \
             rec["memory"]["peak_per_chip_gb"] <= 16.0
-        xla_cost = compiled.cost_analysis() or {}
+        xla_cost = compat.xla_cost_analysis(compiled)
         rec["xla_flops_once"] = float(xla_cost.get("flops", -1))
 
         hlo = compiled.as_text()

@@ -24,7 +24,6 @@ Validated against ``cost_analysis()`` on loop-free graphs (test_dryrun.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from collections import defaultdict
 

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -23,7 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     devs = jax.devices()
     if len(devs) == need:
         return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            shape, axes, **compat.mesh_axis_types_kwargs(len(axes)))
     if len(devs) < need:
         raise RuntimeError(
             f"mesh {shape} needs {need} devices, have {len(devs)} - the "
@@ -32,11 +34,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     # more devices than needed (e.g. 512 host devices, single-pod 256 mesh)
     return jax.sharding.Mesh(
         np.asarray(devs[:need]).reshape(shape), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        **compat.mesh_axis_types_kwargs(len(axes)))
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (subprocess sets device count)."""
     return jax.make_mesh(
         tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        **compat.mesh_axis_types_kwargs(len(axes)))

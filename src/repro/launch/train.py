@@ -14,12 +14,10 @@ CPU-scale example (examples/train_lm.py drives this):
 from __future__ import annotations
 
 import argparse
-import os
 import signal
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import registry

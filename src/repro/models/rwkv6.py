@@ -20,7 +20,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
-from repro.models.common import dense, rmsnorm, silu, uniform_init
+from repro.models.common import dense, silu, uniform_init
 
 LOG_CLAMP = -40.0
 

@@ -1,7 +1,5 @@
 """Per-arch smoke tests: reduced same-family config, one forward/train step
 on CPU, asserting output shapes + no NaNs (assignment requirement f)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

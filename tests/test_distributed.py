@@ -1,5 +1,4 @@
 """Sharding rules, checkpointing, compression, fault tolerance, data."""
-import json
 import os
 import subprocess
 import sys
@@ -7,7 +6,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import registry
@@ -25,7 +23,6 @@ def test_resolve_divisibility(tmp_path):
 
     class FakeMesh:
         axis_names = ("pod", "data", "model")
-        import numpy as _np
         devices = np.empty((2, 16, 16))
     m = FakeMesh()
     spec = shd.resolve(m, (256, 4096), ("batch", None))

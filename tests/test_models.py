@@ -9,7 +9,6 @@ import pytest
 
 from repro.configs import registry
 from repro.models import attention, transformer as T
-from repro.models.padding import gqa_pad_plan
 
 CONSISTENCY_ARCHS = ["qwen2.5-32b", "zamba2-7b", "rwkv6-1.6b",
                      "musicgen-medium", "minicpm-2b"]

@@ -3,7 +3,6 @@ engine with stream policies, example drivers."""
 import os
 
 import numpy as np
-import pytest
 
 import jax
 

@@ -1,7 +1,6 @@
 """Warp-level intrinsics + atomics adaptation."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import atomics, warp
 
