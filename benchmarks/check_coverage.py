@@ -1,0 +1,100 @@
+"""Coverage gate: fail CI when any backend's suite pass-count regresses.
+
+Runs the Table-II coverage sweep (``benchmarks/coverage.py``) and compares
+each backend's number of correct kernels against the committed baseline in
+``benchmarks/coverage_baseline.json``.  Any drop fails the gate; gains are
+reported with a hint to refresh the baseline via ``--write``.
+
+``--disable KERNEL`` artificially marks one suite kernel unsupported on
+every backend before comparing - CI uses this to prove the gate actually
+trips (a gate that cannot fail gates nothing).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import coverage as coverage_bench
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "coverage_baseline.json")
+
+
+def current_counts(disable: str | None = None) -> tuple[dict, int]:
+    table = coverage_bench.run()
+    if disable is not None:
+        if disable not in table:
+            raise SystemExit(
+                f"--disable {disable!r}: no such suite kernel; "
+                f"have {sorted(table)}")
+        row, feats = table[disable]
+        table[disable] = ({fw: "unsupport" for fw in row}, feats)
+    counts = {fw: sum(table[k][0][fw] == "correct" for k in table)
+              for fw in coverage_bench.frameworks()}
+    return counts, len(table)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the baseline from the current suite")
+    ap.add_argument("--disable", metavar="KERNEL",
+                    help="artificially disable one kernel (gate self-test)")
+    ap.add_argument("--baseline", default=BASELINE)
+    args = ap.parse_args(argv)
+
+    counts, n_kernels = current_counts(args.disable)
+
+    if args.write:
+        with open(args.baseline, "w") as f:
+            json.dump({"n_kernels": n_kernels, "backends": counts}, f,
+                      indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written: {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: no baseline at {args.baseline}; commit one with "
+              f"--write", file=sys.stderr)
+        return 2
+
+    failed = False
+    for fw, want in sorted(base["backends"].items()):
+        got = counts.get(fw)
+        if got is None:
+            print(f"FAIL {fw}: backend disappeared from the registry "
+                  f"(baseline: {want}/{base['n_kernels']})",
+                  file=sys.stderr)
+            failed = True
+        elif got < want:
+            print(f"FAIL {fw}: {got}/{n_kernels} correct, baseline "
+                  f"{want}/{base['n_kernels']}", file=sys.stderr)
+            failed = True
+        elif got > want:
+            print(f"PASS {fw}: {got}/{n_kernels} correct (baseline {want}; "
+                  f"refresh with --write)")
+        else:
+            print(f"PASS {fw}: {got}/{n_kernels} correct")
+    for fw in sorted(set(counts) - set(base["backends"])):
+        print(f"NOTE {fw}: new backend ({counts[fw]}/{n_kernels} correct), "
+              f"not in baseline")
+
+    if n_kernels < base["n_kernels"]:
+        print(f"FAIL: suite shrank to {n_kernels} kernels "
+              f"(baseline {base['n_kernels']})", file=sys.stderr)
+        failed = True
+
+    if failed:
+        print("coverage gate: FAILED", file=sys.stderr)
+        return 1
+    print("coverage gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

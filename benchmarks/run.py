@@ -17,14 +17,17 @@ import sys
 import time
 import traceback
 
-from benchmarks import (coverage, endtoend, grain_sweep, launch_overhead,
-                        reorder, roofline)
+from benchmarks import (coverage, endtoend, grain_sweep, graph_replay,
+                        launch_overhead, reorder, roofline)
 
+# argparse-based benchmarks get an explicit empty argv so they don't
+# swallow run.py's own command line
 ALL = {
     "coverage": coverage.main,
     "endtoend": endtoend.main,
     "grain_sweep": grain_sweep.main,
-    "launch_overhead": launch_overhead.main,
+    "graph_replay": lambda: graph_replay.main([]),
+    "launch_overhead": lambda: launch_overhead.main([]),
     "reorder": reorder.main,
     "roofline": roofline.main,
 }

@@ -17,8 +17,8 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
 import jax                          # noqa: E402
 import jax.numpy as jnp             # noqa: E402
 import numpy as np                  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.distributed.compression import compressed_psum, dcn_bytes  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402

@@ -1,8 +1,15 @@
 """CuPBoP-JAX core: the paper's SPMD-to-MPMD transform + runtime, in JAX."""
 from repro.core.api import (
+    CacheStats,
     LaunchConfig,
     cache_clear,
+    cache_resize,
+    cache_size,
+    cache_stats,
+    compiled,
     coverage,
+    disable_disk_cache,
+    enable_disk_cache,
     launch,
     supported,
 )
@@ -15,9 +22,11 @@ from repro.core.backends import (
     unregister_backend,
 )
 from repro.core.dim3 import Dim3
+from repro.core.graphs import Graph, GraphError, GraphExec
 from repro.core.kernel import (
     WARP_SIZE,
     BlockState,
+    CompiledKernel,
     Ctx,
     KernelDef,
     UnsupportedKernel,
@@ -32,9 +41,11 @@ def __getattr__(name):
 
 
 __all__ = [
-    "BACKENDS", "Backend", "BlockState", "Ctx", "Dim3", "Event",
-    "KernelDef", "LaunchConfig", "Policy", "Runtime", "Stream",
-    "UnknownBackend", "UnsupportedKernel", "WARP_SIZE", "backend_names",
-    "cache_clear", "coverage", "get_backend", "launch", "register_backend",
-    "supported", "unregister_backend",
+    "BACKENDS", "Backend", "BlockState", "CacheStats", "CompiledKernel",
+    "Ctx", "Dim3", "Event", "Graph", "GraphError", "GraphExec", "KernelDef",
+    "LaunchConfig", "Policy", "Runtime", "Stream", "UnknownBackend",
+    "UnsupportedKernel", "WARP_SIZE", "backend_names", "cache_clear",
+    "cache_resize", "cache_size", "cache_stats", "compiled", "coverage",
+    "disable_disk_cache", "enable_disk_cache", "get_backend", "launch",
+    "register_backend", "supported", "unregister_backend",
 ]

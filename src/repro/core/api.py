@@ -18,11 +18,17 @@ Two equivalent entry points:
 
 Backends come from the open registry in :mod:`repro.core.backends`; the
 compiled-launch cache is weak-keyed on the kernel so entries die with their
-``KernelDef`` (and ``cache_clear()`` resets it for benchmarks).
+``KernelDef`` (and ``cache_clear()`` resets it for benchmarks).  The cache
+is two-level: a bounded in-memory LRU of :class:`CompiledKernel` entries
+(warm launches skip trace+lower entirely) over an optional on-disk artifact
+store (:mod:`repro.core.compile_cache` - the ``cudaModuleLoad`` analogue,
+enabled via ``CUPBOP_CACHE_DIR`` or :func:`enable_disk_cache`).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 import weakref
 from typing import Any
 
@@ -30,15 +36,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backends as backends_mod
+from repro.core import compile_cache
 from repro.core import grain as grain_mod
 from repro.core import packing
 from repro.core.backends import backend_names, get_backend, register_backend
 from repro.core.dim3 import Dim3
-from repro.core.kernel import KernelDef, UnsupportedKernel
+from repro.core.kernel import CompiledKernel, KernelDef, UnsupportedKernel
 
 __all__ = [
-    "BACKENDS", "LaunchConfig", "cache_clear", "cache_size", "coverage",
-    "launch", "register_backend", "supported",
+    "BACKENDS", "CacheStats", "LaunchConfig", "cache_clear", "cache_resize",
+    "cache_size", "cache_stats", "compiled", "coverage",
+    "disable_disk_cache", "enable_disk_cache", "launch", "register_backend",
+    "supported",
 ]
 
 # The compiled-launch cache lives ON each kernel (a private dict attached to
@@ -48,9 +57,34 @@ __all__ = [
 # jitted fn closes over the kernel, and weak-key mappings hold values
 # strongly, so the value->key edge would pin every entry forever.  Attached
 # to the kernel, kernel -> cache -> jitted fn -> kernel is a pure cycle the
-# GC collects.  The WeakSet only enumerates kernels for cache_clear().
+# GC collects.  The WeakSet only enumerates kernels for cache_clear();
+# the LRU order ring holds (weakref, key) pairs so eviction never extends
+# a kernel's lifetime, and entries of dead kernels are pruned lazily.
 _CACHE_ATTR = "_launch_cache"
 _CACHED_KERNELS: "weakref.WeakSet[KernelDef]" = weakref.WeakSet()
+_LRU: "collections.OrderedDict[tuple, None]" = collections.OrderedDict()
+_MAX_ENTRIES = max(1, int(os.environ.get("CUPBOP_CACHE_SIZE", "256")))
+_DISK: "compile_cache.DiskCache | None" = compile_cache.from_env()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters for the compiled-launch cache (reset by ``cache_clear``).
+
+    ``hits``/``misses`` count in-memory lookups; ``disk_hits`` are misses
+    served by deserializing an on-disk artifact instead of re-tracing;
+    ``disk_stores`` count artifacts persisted; ``evictions`` count LRU
+    drops after the cache exceeded its bound.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    disk_hits: int = 0
+    disk_stores: int = 0
+
+
+_STATS = CacheStats()
 
 
 def __getattr__(name: str):
@@ -68,14 +102,62 @@ def _kernel_cache(kernel: KernelDef) -> dict:
     return cache
 
 
+def _lru_touch(kernel: KernelDef, key: tuple) -> None:
+    _LRU.move_to_end((weakref.ref(kernel), key))
+
+
+def _evict_to_bound() -> None:
+    while len(_LRU) > _MAX_ENTRIES:
+        (ref, old_key), _ = _LRU.popitem(last=False)
+        owner = ref()
+        if owner is None:          # kernel already died; stale order entry
+            continue
+        if getattr(owner, _CACHE_ATTR, {}).pop(old_key, None) is not None:
+            _STATS.evictions += 1
+
+
+def _lru_insert(kernel: KernelDef, key: tuple) -> None:
+    _LRU[(weakref.ref(kernel), key)] = None
+    _evict_to_bound()
+
+
 def cache_clear() -> None:
-    """Drop all compiled launches (benchmark isolation)."""
+    """Drop all compiled launches and reset stats (benchmark isolation)."""
     for k in list(_CACHED_KERNELS):
         getattr(k, _CACHE_ATTR, {}).clear()
+    _LRU.clear()
+    global _STATS
+    _STATS = CacheStats()
 
 
 def cache_size() -> int:
     return sum(len(getattr(k, _CACHE_ATTR, {})) for k in _CACHED_KERNELS)
+
+
+def cache_stats() -> CacheStats:
+    """A snapshot of the cache counters."""
+    return dataclasses.replace(_STATS)
+
+
+def cache_resize(max_entries: int) -> None:
+    """Re-bound the LRU (evicting down if needed); benchmarks use 1-2."""
+    global _MAX_ENTRIES
+    if max_entries < 1:
+        raise ValueError(f"cache bound must be >= 1, got {max_entries}")
+    _MAX_ENTRIES = max_entries
+    _evict_to_bound()
+
+
+def enable_disk_cache(path: str) -> "compile_cache.DiskCache":
+    """Persist compile artifacts under ``path`` (cudaModuleLoad analogue)."""
+    global _DISK
+    _DISK = compile_cache.DiskCache(path)
+    return _DISK
+
+
+def disable_disk_cache() -> None:
+    global _DISK
+    _DISK = None
 
 
 def _build(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
@@ -104,23 +186,77 @@ def _resolve_grain(kernel: KernelDef, grain, pool, n_blocks: int) -> int:
     return max(1, min(int(grain), n_blocks))
 
 
+def _compile(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
+             grain: int, dyn_shared, interpret: bool, treedef, leaves,
+             shapes, key: tuple) -> CompiledKernel:
+    """Cache-miss path: disk artifact if available, else trace+lower."""
+    akey = None
+    if _DISK is not None:
+        akey = compile_cache.artifact_key(
+            kernel.fingerprint(), backend, grid, block, grain, dyn_shared,
+            interpret, treedef, shapes)
+        loaded = _DISK.load(akey)
+        if loaded is not None:
+            _STATS.disk_hits += 1
+            return CompiledKernel(kernel=kernel, backend=backend, grid=grid,
+                                  block=block, key=key, fn=jax.jit(loaded),
+                                  source="disk")
+    fn = _build(kernel, backend, grid, block, grain, dyn_shared, treedef,
+                interpret)
+    # surface UnsupportedKernel eagerly (coverage probes rely on this)
+    jax.eval_shape(fn, *leaves)
+    if _DISK is not None and _DISK.store(akey, fn, leaves):
+        _STATS.disk_stores += 1
+    return CompiledKernel(kernel=kernel, backend=backend, grid=grid,
+                          block=block, key=key, fn=fn, source="trace")
+
+
+def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
+               backend: str, grain, dyn_shared, interpret: bool,
+               pool) -> tuple[CompiledKernel, tuple]:
+    """Resolve the launch specialization: memory hit, disk hit, or compile."""
+    grain = _resolve_grain(kernel, grain, pool, grid.size)
+    leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
+    shapes = tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves)
+    key = (backend, grid, block, grain, dyn_shared, interpret, treedef,
+           shapes)
+    per_kernel = _kernel_cache(kernel)
+    entry = per_kernel.get(key)
+    if entry is not None:
+        _STATS.hits += 1
+        _lru_touch(kernel, key)
+        return entry, leaves
+    _STATS.misses += 1
+    entry = _compile(kernel, backend, grid, block, grain, dyn_shared,
+                     interpret, treedef, leaves, shapes, key)
+    per_kernel[key] = entry
+    _lru_insert(kernel, key)
+    return entry, leaves
+
+
 def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
             backend: str, grain, dyn_shared, interpret: bool,
             pool) -> dict:
-    grain = _resolve_grain(kernel, grain, pool, grid.size)
-    leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
-    key = (
-        backend, grid, block, grain, dyn_shared, interpret, treedef,
-        tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves),
-    )
-    per_kernel = _kernel_cache(kernel)
-    if key not in per_kernel:
-        # surface UnsupportedKernel eagerly (coverage probes rely on this)
-        probe = _build(kernel, backend, grid, block, grain, dyn_shared,
-                       treedef, interpret)
-        jax.eval_shape(probe, *leaves)
-        per_kernel[key] = probe
-    return per_kernel[key](*leaves)
+    entry, leaves = _entry_for(kernel, grid, block, args, backend, grain,
+                               dyn_shared, interpret, pool)
+    return entry(*leaves)
+
+
+def compiled(kernel: KernelDef, *, grid, block, args: dict,
+             backend: str = "vector", grain: int | str = 1,
+             dyn_shared: int | None = None, interpret: bool = True,
+             pool: int | None = None) -> CompiledKernel:
+    """Compile (or fetch) the launch specialization without running it.
+
+    The ``cudaModuleGetFunction`` analogue: pre-warm a specialization
+    (e.g. at service startup, before traffic) or inspect its provenance -
+    callers get the same :class:`CompiledKernel` a warm ``launch`` would
+    dispatch through, with ``source`` telling whether it came from trace,
+    memory, or a disk artifact.
+    """
+    entry, _ = _entry_for(kernel, Dim3.of(grid), Dim3.of(block), args,
+                          backend, grain, dyn_shared, interpret, pool)
+    return entry
 
 
 @dataclasses.dataclass(frozen=True)

@@ -45,7 +45,8 @@ def make_vecadd(n: int) -> KernelDef:
         idx = jnp.where(gid < n, gid, OOB)
         return st.set_glob(c=st.glob["c"].at[idx].set(val, mode="drop"))
 
-    return KernelDef("vecadd", (stage,), writes=("c",), est_block_work=3e2)
+    return KernelDef("vecadd", (stage,), writes=("c",),
+                     reads=("a", "b", "c"), est_block_work=3e2)
 
 
 # --------------------------------------------------------------------------
@@ -62,7 +63,7 @@ def make_reverse() -> KernelDef:
         return st.set_glob(d=d)
 
     return KernelDef(
-        "reverse", (load, store), writes=("d",),
+        "reverse", (load, store), writes=("d",), reads=("d",),
         shared={"s": ((-1,), jnp.int32)}, est_block_work=2e2,
     )
 
@@ -88,7 +89,7 @@ def make_histogram(n: int, nbins: int, total_threads: int,
         return st.set_glob(hist=hist)
 
     return KernelDef(f"histogram_{layout}", (stage,), writes=("hist",),
-                     est_block_work=3e2 * iters)
+                     reads=("x", "hist"), est_block_work=3e2 * iters)
 
 
 # --------------------------------------------------------------------------
@@ -122,7 +123,7 @@ def make_reduce_shared(n: int, block: int) -> KernelDef:
         off //= 2
     stages.append(store)
     return KernelDef(
-        "reduce_shared", tuple(stages), writes=("out",),
+        "reduce_shared", tuple(stages), writes=("out",), reads=("x", "out"),
         shared={"s": ((block,), jnp.float32)}, est_block_work=block * 8.0,
     )
 
@@ -154,6 +155,7 @@ def make_reduce_warp(n: int, block: int) -> KernelDef:
 
     return KernelDef(
         "reduce_warp", (warp_phase, final_phase), writes=("out",),
+        reads=("x", "out"),
         shared={"s": ((nwarps,), jnp.float32)}, uses_warp=True,
         est_block_work=block * 4.0,
     )
@@ -200,7 +202,7 @@ def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
         stages += [make_load(kk), compute]
     stages.append(store)
     return KernelDef(
-        "matmul_tiled", tuple(stages), writes=("c",),
+        "matmul_tiled", tuple(stages), writes=("c",), reads=("a", "b", "c"),
         shared={"sa": ((tile, tile), jnp.float32),
                 "sb": ((tile, tile), jnp.float32)},
         est_block_work=tile * tile * k * 2.0,
@@ -230,7 +232,7 @@ def make_stencil1d(n: int, block: int) -> KernelDef:
         return st.set_glob(y=st.glob["y"].at[idx].set(val, mode="drop"))
 
     return KernelDef(
-        "stencil1d", (load, compute), writes=("y",),
+        "stencil1d", (load, compute), writes=("y",), reads=("x", "y"),
         shared={"s": ((block + 2,), jnp.float32)}, est_block_work=block * 6.0,
     )
 
@@ -273,7 +275,7 @@ def make_stencil2d(h: int, w: int, tile_y: int = 8,
         return st.set_glob(y=y)
 
     return KernelDef(
-        "stencil2d", (load, compute), writes=("y",),
+        "stencil2d", (load, compute), writes=("y",), reads=("x", "y"),
         shared={"s": ((tile_y + 2, tile_x + 2), jnp.float32)},
         est_block_work=tile_y * tile_x * 10.0,
     )
@@ -301,6 +303,7 @@ def make_softmax_row(block: int) -> KernelDef:
 
     return KernelDef(
         "softmax_row", (load, exps, normalize), writes=("y",),
+        reads=("x", "y"),
         shared={"s": ((block,), jnp.float32), "p": ((block,), jnp.float32)},
         est_block_work=block * 10.0,
     )
@@ -343,7 +346,7 @@ def make_scan_block(block: int) -> KernelDef:
         d *= 2
     stages.append(store)
     return KernelDef(
-        "scan_block", tuple(stages), writes=("y",),
+        "scan_block", tuple(stages), writes=("y",), reads=("x", "y"),
         shared={"s": ((block,), jnp.float32)},
         est_block_work=block * math.log2(block) * 4.0,
     )
@@ -371,7 +374,7 @@ def make_transpose_tiled(h: int, w: int, tile: int = 8) -> KernelDef:
         return st.set_glob(y=y)
 
     return KernelDef(
-        "transpose_tiled", (load, store), writes=("y",),
+        "transpose_tiled", (load, store), writes=("y",), reads=("x", "y"),
         shared={"t": ((tile, tile), jnp.float32)},
         est_block_work=tile * tile * 4.0,
     )

@@ -27,6 +27,7 @@ chunk size.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Mapping, NamedTuple, Sequence
 
 import jax
@@ -182,6 +183,10 @@ class KernelDef:
     memory, resolved by the ``dyn_shared`` launch parameter (Listing 3).
     ``writes`` names the global buffers this kernel mutates - consumed by the
     stream runtime for implicit-barrier insertion (Listing 4).
+    ``reads`` optionally names the global buffers the kernel consumes (the
+    analogue of ``const __restrict__`` annotations): graph capture uses it
+    to build precise dependence edges; ``None`` means "may read anything"
+    and degrades to conservative whole-heap ordering.
     ``est_block_work`` is the per-block instruction estimate used by the
     aggressive-grain heuristic (Table V '# inst' column).
 
@@ -201,6 +206,7 @@ class KernelDef:
     shared: Mapping[str, tuple[tuple[int, ...], Any]] = dataclasses.field(
         default_factory=dict
     )
+    reads: Sequence[str] | None = None
     uses_warp: bool = False
     est_block_work: float = 1e6
 
@@ -233,6 +239,80 @@ class KernelDef:
             name: jnp.zeros(shape, dtype)
             for name, (shape, dtype) in self.resolved_shared(dyn_shared).items()
         }
+
+    def fingerprint(self) -> str:
+        """Content hash of the kernel, stable across processes.
+
+        Keys the on-disk compile cache (the role ``cudaModuleLoad`` plays in
+        CuPBoP's Fig. 3 library replacement): two ``KernelDef``s built from
+        the same factory with the same parameters hash equal, while editing a
+        stage body, the shared spec, or the read/write sets invalidates every
+        cached artifact.  Stage closures are hashed by bytecode plus captured
+        cell values (factory parameters like tile sizes live in cells).
+        """
+        h = hashlib.sha256()
+        h.update(repr((self.name, tuple(self.writes),
+                       None if self.reads is None else tuple(self.reads),
+                       tuple(sorted((n, (tuple(s), jnp.dtype(d).name))
+                                    for n, (s, d) in self.shared.items())),
+                       self.uses_warp)).encode())
+        for stage in self.stages:
+            _hash_callable(h, stage, depth=0)
+        return h.hexdigest()
+
+
+def _hash_callable(h, fn: Callable, depth: int) -> None:
+    code = getattr(fn, "__code__", None)
+    if code is None or depth > 4:    # builtins / pathological nesting
+        h.update(repr(fn).encode())
+        return
+    h.update(code.co_code)
+    h.update(repr([c for c in code.co_consts
+                   if not hasattr(c, "co_code")]).encode())
+    for const in code.co_consts:     # nested lambdas/defs inside the stage
+        if hasattr(const, "co_code"):
+            h.update(const.co_code)
+    for cell in fn.__closure__ or ():
+        try:
+            v = cell.cell_contents
+        except ValueError:           # empty cell
+            continue
+        if callable(v):
+            _hash_callable(h, v, depth + 1)
+        elif hasattr(v, "dtype") and hasattr(v, "shape"):
+            # arrays: repr truncates past ~1000 elements, which would let
+            # two kernels with different captured weights collide
+            arr = jax.device_get(v)
+            h.update(repr((arr.shape, arr.dtype.name)).encode())
+            h.update(arr.tobytes())
+        else:
+            h.update(repr(v).encode())
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    """A launch specialization after trace+lower: CuPBoP's ``CUmodule``.
+
+    One entry per (kernel, backend, geometry, arg-shape) key in the compile
+    cache; ``fn`` is the jitted callable over packed leaves (the ``void**``
+    ABI of :mod:`repro.core.packing`).  ``source`` records how the entry was
+    produced - ``"trace"`` (cold trace+lower) or ``"disk"`` (deserialized
+    artifact, the ``cudaModuleLoad`` path) - and ``hits`` counts warm
+    launches served by this entry.
+    """
+
+    kernel: KernelDef
+    backend: str
+    grid: Dim3
+    block: Dim3
+    key: tuple
+    fn: Callable
+    source: str = "trace"
+    hits: int = 0
+
+    def __call__(self, *leaves):
+        self.hits += 1
+        return self.fn(*leaves)
 
 
 def check_priv_chunk(priv: Any, chunk: int, kernel_name: str, stage_idx: int):

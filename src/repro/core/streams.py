@@ -30,6 +30,19 @@ Cross-stream hazards are tracked on the shared heap: a launch (or memcpy)
 touching a buffer whose in-flight writer lives on *another* stream inserts
 a barrier there first - the implicit-barrier analysis of Listing 4 extended
 stream-to-stream.
+
+Streams also support CUDA-Graphs-style capture
+(:mod:`repro.core.graphs`)::
+
+    g = s.begin_capture()                       # cudaStreamBeginCapture
+    kernel[grid, block, None, s]()              # recorded, not executed
+    s.end_capture()                             # cudaStreamEndCapture
+    ex = g.instantiate()                        # cudaGraphInstantiate
+    ex.launch(s)                                # cudaGraphLaunch
+
+While capturing, launches/memcpy_h2d/event record+wait become DAG nodes;
+host-visible operations (``memcpy_d2h``, ``synchronize``, ``malloc``) raise
+``GraphError`` - the cudaErrorStreamCaptureUnsupported rule.
 """
 from __future__ import annotations
 
@@ -44,6 +57,7 @@ import jax
 import numpy as np
 
 from repro.core import api
+from repro.core import graphs as graphs_mod
 from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef
 
@@ -58,11 +72,13 @@ class StreamStats:
     launches: int = 0
     syncs: int = 0
     barriers_inserted: int = 0
+    graph_launches: int = 0
 
     def __iadd__(self, other: "StreamStats") -> "StreamStats":
         self.launches += other.launches
         self.syncs += other.syncs
         self.barriers_inserted += other.barriers_inserted
+        self.graph_launches += other.graph_launches
         return self
 
 
@@ -86,9 +102,14 @@ class Event:
         self._watcher: threading.Thread | None = None
         self._error: Exception | None = None
         self._gen = 0              # guards against stale watcher threads
+        self._capture = None       # (Graph, node idx) when captured
 
     def record(self, stream: "Stream") -> "Event":
         """Snapshot ``stream``'s in-flight writes (cudaEventRecord)."""
+        if stream._capture is not None:
+            stream._capture.add_event_record(stream, self)
+            return self
+        self._capture = None       # eager re-record supersedes a capture
         self._fence = {n: stream.buffers[n] for n in stream._pending}
         self._stream = stream
         self._recorded = True
@@ -130,9 +151,32 @@ class Event:
 
     def elapsed(self, later: "Event") -> float:
         """Milliseconds between this event's completion and ``later``'s
-        (cudaEventElapsedTime; both events must have been recorded)."""
+        (cudaEventElapsedTime; both events must have been recorded).
+
+        Raises ``RuntimeError`` - never returns garbage or ``None`` - when
+        either record point is missing: an event that was never recorded
+        (cudaErrorInvalidResourceHandle), one captured into a graph (its
+        record executes only at replay, which takes no wall-clock stamp),
+        or one whose completion stamp was superseded by a re-record while
+        the watcher was in flight.
+        """
+        for role, e in (("start", self), ("end", later)):
+            if e._capture is not None:
+                raise RuntimeError(
+                    f"cannot compute elapsed time: {role} event {e.name!r} "
+                    f"was captured into a graph, not recorded eagerly")
+            if not e._recorded:
+                raise RuntimeError(
+                    f"cannot compute elapsed time: {role} event {e.name!r} "
+                    f"has not been recorded (cudaEventRecord first)")
         self.synchronize()
         later.synchronize()
+        if self._time is None or later._time is None:
+            which = self.name if self._time is None else later.name
+            raise RuntimeError(
+                f"cannot compute elapsed time: event {which!r} has no "
+                f"completion stamp (a re-record superseded the watcher "
+                f"before it finished; synchronize the new record instead)")
         return (later._time - self._time) * 1e3
 
 
@@ -166,20 +210,60 @@ class Stream:
             self.buffers = dict(buffers or {})
         self.policy = policy
         self._pending: set[str] = set()   # buffers with an in-flight writer
+        self._capture: "graphs_mod.Graph | None" = None
         self.stats = StreamStats()
+
+    # -- graph capture (cudaStreamBeginCapture / cudaStreamEndCapture) -------
+    def begin_capture(self, graph: "graphs_mod.Graph | None" = None):
+        """Start recording this stream's work into a graph.
+
+        Subsequent launches, ``memcpy_h2d`` and event record/wait calls
+        become DAG nodes instead of executing.  Pass an existing ``graph``
+        to capture several streams into one DAG (or use
+        ``Runtime.begin_capture``).
+        """
+        if self._capture is not None:
+            raise graphs_mod.GraphError(
+                f"stream {self.name!r} is already capturing")
+        g = graph if graph is not None else graphs_mod.Graph()
+        g._attach(self)
+        self._capture = g
+        return g
+
+    def end_capture(self) -> "graphs_mod.Graph":
+        """Stop capturing and return the graph (cudaStreamEndCapture)."""
+        if self._capture is None:
+            raise graphs_mod.GraphError(
+                f"stream {self.name!r} is not capturing")
+        g = self._capture
+        self._capture = None
+        g._detach(self)
+        return g
+
+    def _forbid_capture(self, op: str):
+        if self._capture is not None:
+            raise graphs_mod.GraphError(
+                f"{op} on capturing stream {self.name!r}: host-visible "
+                f"operations are not capturable "
+                f"(cudaErrorStreamCaptureUnsupported)")
 
     # -- memory management (Fig. 3 library replacement) ----------------------
     def malloc(self, name: str, shape, dtype):
+        self._forbid_capture("malloc")
         import jax.numpy as jnp
         self.buffers[name] = jnp.zeros(shape, dtype)
         return name
 
     def memcpy_h2d(self, name: str, host: np.ndarray):
+        if self._capture is not None:
+            self._capture.add_h2d(self, name, np.asarray(host))
+            return
         # host->device write: must order after pending writers of `name`
         self._barrier_if_hazard({name})
         self.buffers[name] = jax.device_put(np.asarray(host))
 
     def memcpy_d2h(self, name: str) -> np.ndarray:
+        self._forbid_capture("memcpy_d2h")
         self._barrier_if_hazard({name})
         return np.asarray(jax.device_get(self.buffers[name]))
 
@@ -198,6 +282,21 @@ class Stream:
         other buffers - not on whatever the heap last held for ``a``.
         """
         grid, block = Dim3.of(grid), Dim3.of(block)
+        if self._capture is not None:
+            known = set(self.buffers) | self._capture.written()
+            missing = [n for n in (args or {}) if n not in known]
+            if missing:
+                raise KeyError(
+                    f"stream {self.name!r}: no buffer(s) {missing} on the "
+                    f"heap; malloc/memcpy_h2d first (typo'd name?)")
+            for n, v in (args or {}).items():
+                if v is not None:       # arg update = captured h2d node
+                    self._capture.add_h2d(self, n, v)
+            self._capture.add_kernel(
+                self, kernel, grid=grid, block=block, backend=backend,
+                grain=grain, dyn_shared=dyn_shared, interpret=interpret,
+                pool=pool)
+            return
         if args:
             missing = [n for n in args if n not in self.buffers]
             if missing:
@@ -234,7 +333,18 @@ class Stream:
         work is still in flight on the recording stream.  The fence is the
         *snapshot taken at record time* - work launched on the source
         stream after the record is not waited on (and stays pending there).
+
+        During capture the wait becomes a DAG edge from the event's record
+        node (which must belong to the same graph).
         """
+        if self._capture is not None:
+            self._capture.add_event_wait(self, event)
+            return
+        if event._capture is not None:
+            raise graphs_mod.GraphError(
+                f"stream {self.name!r} cannot eagerly wait on event "
+                f"{event.name!r}: it was captured into a graph and only "
+                f"fires at replay")
         if not event._recorded:
             raise RuntimeError(
                 f"stream {self.name!r} cannot wait on unrecorded event "
@@ -298,6 +408,7 @@ class Stream:
         """cudaStreamSynchronize: no-op when nothing is in flight (the seed
         blocked on every buffer and counted a sync even with an empty
         pending set, skewing the Fig. 11 launch/sync ratios)."""
+        self._forbid_capture("synchronize")
         if not self._pending:
             return
         self._sync_buffers(set(self._pending))
@@ -317,14 +428,50 @@ class Runtime:
         self._writers: dict[str, Stream] = {}   # buffer -> in-flight writer
         self._streams: dict[str, Stream] = {}
         self._event_ids = itertools.count()
+        self._capture: "graphs_mod.Graph | None" = None
 
     # -- streams --------------------------------------------------------------
     def stream(self, name: str = "default") -> Stream:
-        """Get-or-create the named stream (cudaStreamCreate)."""
+        """Get-or-create the named stream (cudaStreamCreate).
+
+        A stream created during ``begin_capture`` joins the capture, so
+        multi-stream pipelines can be recorded without pre-declaring every
+        stream.
+        """
         if name not in self._streams:
-            self._streams[name] = Stream(policy=self.policy, name=name,
-                                         runtime=self)
+            s = Stream(policy=self.policy, name=name, runtime=self)
+            if self._capture is not None:
+                s.begin_capture(self._capture)
+            self._streams[name] = s
         return self._streams[name]
+
+    # -- graph capture (device-wide: every stream records into one DAG) ------
+    def begin_capture(self) -> "graphs_mod.Graph":
+        """Capture all of this runtime's streams into one graph."""
+        if self._capture is not None:
+            raise graphs_mod.GraphError("runtime is already capturing")
+        busy = [s.name for s in self._streams.values()
+                if s._capture is not None]
+        if busy:    # check first: a partial attach would half-capture
+            raise graphs_mod.GraphError(
+                f"runtime cannot begin capture: stream(s) {busy} are "
+                f"already capturing independently")
+        g = graphs_mod.Graph()
+        for s in self._streams.values():
+            s.begin_capture(g)
+        self._capture = g
+        return g
+
+    def end_capture(self) -> "graphs_mod.Graph":
+        """End the device-wide capture and return the graph."""
+        if self._capture is None:
+            raise graphs_mod.GraphError("runtime is not capturing")
+        g = self._capture
+        self._capture = None
+        for s in self._streams.values():
+            if s._capture is g:
+                s.end_capture()
+        return g
 
     @property
     def streams(self) -> tuple[Stream, ...]:

@@ -2,9 +2,8 @@
 engine with stream policies, example drivers."""
 import os
 
-import numpy as np
-
 import jax
+import numpy as np
 
 from repro.configs import registry
 from repro.core.streams import Policy
