@@ -2,8 +2,9 @@
 
 Runs the Table-II coverage sweep (``benchmarks/coverage.py``) and compares
 each backend's number of correct kernels against the committed baseline in
-``benchmarks/coverage_baseline.json``.  Any drop fails the gate; gains are
-reported with a hint to refresh the baseline via ``--write``.
+``benchmarks/coverage_baseline.json``.  Any drop fails the gate; gains
+(e.g. a new backend adding a row per kernel) are reported with a hint to
+refresh the baseline via ``--update`` - regenerate it, never hand-edit.
 
 ``--disable KERNEL`` artificially marks one suite kernel unsupported on
 every backend before comparing - CI uses this to prove the gate actually
@@ -38,8 +39,10 @@ def current_counts(disable: str | None = None) -> tuple[dict, int]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--write", action="store_true",
-                    help="regenerate the baseline from the current suite")
+    ap.add_argument("--update", "--write", action="store_true",
+                    dest="write",
+                    help="regenerate the baseline from the current suite "
+                         "(instead of hand-editing it)")
     ap.add_argument("--disable", metavar="KERNEL",
                     help="artificially disable one kernel (gate self-test)")
     ap.add_argument("--baseline", default=BASELINE)

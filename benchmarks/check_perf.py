@@ -1,0 +1,158 @@
+"""Perf-regression gate: fail CI when a benchmark ratio falls out of band.
+
+The bench-smoke job has always *produced* ``launch_overhead.json`` /
+``graph_replay.json`` (now also ``shard_scaling.json``) - but nothing
+gated on them, so a change could halve the graph-replay speedup and CI
+would stay green.  This script compares the dimensionless *ratio* metrics
+of those result files (speedups - wall-clock microseconds are meaningless
+across runner generations) against the committed baseline in
+``benchmarks/perf_baseline.json``.
+
+A metric passes when::
+
+    current >= max(floor, baseline_value * min_frac)
+
+``min_frac`` is a generous tolerance band (shared CI runners are noisy;
+the gate is for *regressions*, not for benchmarking), ``floor`` an
+absolute never-go-below bar tied to each subsystem's headline claim
+(e.g. warm cache-hit launches must stay >= 5x cold).  Improvements never
+fail the gate; a metric more than 2x above baseline prints a hint to
+refresh via ``--update``.
+
+``--inject METRIC=VALUE`` overrides one current value before comparing -
+CI uses this to prove the gate actually trips (a gate that cannot fail
+gates nothing), mirroring ``check_coverage.py --disable``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "perf_baseline.json")
+
+# metric id -> (dotted path into the result json, default min_frac, floor)
+#
+# metric ids are "<result file stem>:<dotted path>"; --update rewrites the
+# baseline values but keeps these bands.
+METRICS = {
+    "launch_overhead:cache.warm_speedup":
+        ("launch_overhead.json", "cache.warm_speedup", 0.15, 5.0),
+    "launch_overhead:cache.disk_speedup":
+        ("launch_overhead.json", "cache.disk_speedup", 0.30, 1.2),
+    "launch_overhead:policies.async_speedup":
+        ("launch_overhead.json", "policies.async_speedup", 0.50, 0.9),
+    "graph_replay:graph_speedup":
+        ("graph_replay.json", "graph_speedup", 0.40, 1.0),
+    # the max-device-vs-1 ratio is noisy on oversubscribed hosts (forcing
+    # 8 host devices onto 2 cores), so its floor only guards catastrophic
+    # slowdowns; best-over-sweep is the stable does-sharding-scale gate.
+    "shard_scaling:speedup":
+        ("shard_scaling.json", "speedup", 0.40, 0.6),
+    "shard_scaling:speedup_best":
+        ("shard_scaling.json", "speedup_best", 0.40, 1.1),
+}
+
+
+def _dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def current_values(results_dir: str) -> dict[str, float | None]:
+    values: dict[str, float | None] = {}
+    cache: dict[str, dict | None] = {}
+    for metric, (fname, path, _frac, _floor) in METRICS.items():
+        if fname not in cache:
+            try:
+                with open(os.path.join(results_dir, fname)) as f:
+                    cache[fname] = json.load(f)
+            except (OSError, ValueError):
+                cache[fname] = None
+        doc = cache[fname]
+        values[metric] = None if doc is None else _dig(doc, path)
+    return values
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the baseline from the current results")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--results-dir", default=".",
+                    help="directory holding the benchmark --json outputs")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="METRIC=VALUE",
+                    help="override one current value (gate self-test)")
+    args = ap.parse_args(argv)
+
+    values = current_values(args.results_dir)
+    for spec in args.inject:
+        metric, _, raw = spec.partition("=")
+        if metric not in METRICS:
+            ap.error(f"--inject {metric!r}: unknown metric; "
+                     f"have {sorted(METRICS)}")   # exit 2: config error,
+        values[metric] = float(raw)               # never "gate tripped"
+
+    if args.update:
+        missing = [m for m, v in values.items() if v is None]
+        if missing:
+            print(f"FAIL --update: missing result metric(s) {missing}; "
+                  f"run all three benchmarks with --json first",
+                  file=sys.stderr)
+            return 2
+        doc = {"metrics": {
+            m: {"value": round(float(values[m]), 4),
+                "min_frac": METRICS[m][2], "floor": METRICS[m][3]}
+            for m in sorted(METRICS)}}
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"baseline written: {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)["metrics"]
+    except FileNotFoundError:
+        print(f"FAIL: no baseline at {args.baseline}; commit one with "
+              f"--update", file=sys.stderr)
+        return 2
+
+    failed = False
+    for metric, spec in sorted(base.items()):
+        got = values.get(metric)
+        want = max(spec["floor"], spec["value"] * spec["min_frac"])
+        if got is None:
+            print(f"FAIL {metric}: metric missing from results in "
+                  f"{args.results_dir!r} (baseline {spec['value']})",
+                  file=sys.stderr)
+            failed = True
+        elif got < want:
+            print(f"FAIL {metric}: {got:.2f} < {want:.2f} "
+                  f"(baseline {spec['value']} * band {spec['min_frac']}, "
+                  f"floor {spec['floor']})", file=sys.stderr)
+            failed = True
+        elif got > 2.0 * spec["value"]:
+            print(f"PASS {metric}: {got:.2f} (baseline {spec['value']}; "
+                  f">2x better - refresh with --update)")
+        else:
+            print(f"PASS {metric}: {got:.2f} >= {want:.2f}")
+    for metric in sorted(set(METRICS) - set(base)):
+        print(f"NOTE {metric}: not in baseline (current "
+              f"{values.get(metric)}); refresh with --update")
+
+    if failed:
+        print("perf gate: FAILED", file=sys.stderr)
+        return 1
+    print("perf gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,34 @@ def set_mesh(mesh):
     return mesh  # Mesh is itself a context manager on older jax
 
 
+def shard_map_fn():
+    """Resolve ``shard_map`` across its graduation out of experimental.
+
+    ``jax.experimental.shard_map.shard_map`` (<= 0.5) became
+    ``jax.shard_map`` (0.6+, where the experimental path is deprecated and
+    later removed) - and the ``check_rep=`` kwarg was renamed
+    ``check_vma=`` along the way.  The returned wrapper takes the stable
+    subset (``mesh``/``in_specs``/``out_specs``) and disables the
+    replication check under whichever spelling this jax accepts (our
+    out_specs rely on collective results being replicated, which older
+    checkers cannot always prove).
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+
+    def wrapper(f, *, mesh, in_specs, out_specs):
+        for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+            try:
+                return fn(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+            except TypeError:       # kwarg not known to this jax
+                continue
+        raise TypeError("shard_map signature not recognized")
+
+    return wrapper
+
+
 def tpu_compiler_params(**kwargs):
     """Build pallas-TPU compiler params across the TPUCompilerParams rename."""
     from jax.experimental.pallas import tpu as pltpu

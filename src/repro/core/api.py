@@ -160,15 +160,29 @@ def disable_disk_cache() -> None:
     _DISK = None
 
 
+def device_opts(backend_entry, devices, shard_axis) -> dict:
+    """Extra builder kwargs for multi-device backends.
+
+    Only backends tagged ``multi_device`` receive ``devices``/
+    ``shard_axis`` - single-device builders (including third-party ones
+    registered before the tag existed) keep the plain uniform signature.
+    """
+    if backend_entry.supports("multi_device"):
+        return {"devices": devices, "shard_axis": shard_axis}
+    return {}
+
+
 def _build(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
-           grain: int, dyn_shared, treedef, interpret: bool):
+           grain: int, dyn_shared, treedef, interpret: bool,
+           devices, shard_axis):
     entry = get_backend(backend)
+    extra = device_opts(entry, devices, shard_axis)
 
     def fn(*leaves):
         glob = packing.unpack(leaves, treedef)  # kernel prologue (SIII-C.2)
         return entry.run(kernel, grid=grid, block=block, glob=glob,
                          grain=grain, dyn_shared=dyn_shared,
-                         interpret=interpret)
+                         interpret=interpret, **extra)
 
     return jax.jit(fn)
 
@@ -188,13 +202,14 @@ def _resolve_grain(kernel: KernelDef, grain, pool, n_blocks: int) -> int:
 
 def _compile(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
              grain: int, dyn_shared, interpret: bool, treedef, leaves,
-             shapes, key: tuple) -> CompiledKernel:
+             shapes, key: tuple, devices, shard_axis) -> CompiledKernel:
     """Cache-miss path: disk artifact if available, else trace+lower."""
     akey = None
     if _DISK is not None:
         akey = compile_cache.artifact_key(
             kernel.fingerprint(), backend, grid, block, grain, dyn_shared,
-            interpret, treedef, shapes)
+            interpret, treedef, shapes, devices=devices,
+            shard_axis=shard_axis)
         loaded = _DISK.load(akey)
         if loaded is not None:
             _STATS.disk_hits += 1
@@ -202,7 +217,7 @@ def _compile(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
                                   block=block, key=key, fn=jax.jit(loaded),
                                   source="disk")
     fn = _build(kernel, backend, grid, block, grain, dyn_shared, treedef,
-                interpret)
+                interpret, devices, shard_axis)
     # surface UnsupportedKernel eagerly (coverage probes rely on this)
     jax.eval_shape(fn, *leaves)
     if _DISK is not None and _DISK.store(akey, fn, leaves):
@@ -213,13 +228,20 @@ def _compile(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
 
 def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
                backend: str, grain, dyn_shared, interpret: bool,
-               pool) -> tuple[CompiledKernel, tuple]:
+               pool, devices=None,
+               shard_axis: str = "blocks") -> tuple[CompiledKernel, tuple]:
     """Resolve the launch specialization: memory hit, disk hit, or compile."""
     grain = _resolve_grain(kernel, grain, pool, grid.size)
+    # single-device backends ignore the device options, so normalize them
+    # out of the key - launch(backend="loop", devices=4) must share the
+    # specialization (and disk artifact) of the plain launch
+    opts = device_opts(get_backend(backend), devices, shard_axis)
+    devices = opts.get("devices")
+    shard_axis = opts.get("shard_axis", "blocks")
     leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
     shapes = tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves)
     key = (backend, grid, block, grain, dyn_shared, interpret, treedef,
-           shapes)
+           shapes, devices, shard_axis)
     per_kernel = _kernel_cache(kernel)
     entry = per_kernel.get(key)
     if entry is not None:
@@ -228,7 +250,8 @@ def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
         return entry, leaves
     _STATS.misses += 1
     entry = _compile(kernel, backend, grid, block, grain, dyn_shared,
-                     interpret, treedef, leaves, shapes, key)
+                     interpret, treedef, leaves, shapes, key, devices,
+                     shard_axis)
     per_kernel[key] = entry
     _lru_insert(kernel, key)
     return entry, leaves
@@ -236,16 +259,18 @@ def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
 
 def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
             backend: str, grain, dyn_shared, interpret: bool,
-            pool) -> dict:
+            pool, devices=None, shard_axis: str = "blocks") -> dict:
     entry, leaves = _entry_for(kernel, grid, block, args, backend, grain,
-                               dyn_shared, interpret, pool)
+                               dyn_shared, interpret, pool, devices,
+                               shard_axis)
     return entry(*leaves)
 
 
 def compiled(kernel: KernelDef, *, grid, block, args: dict,
              backend: str = "vector", grain: int | str = 1,
              dyn_shared: int | None = None, interpret: bool = True,
-             pool: int | None = None) -> CompiledKernel:
+             pool: int | None = None, devices: int | None = None,
+             shard_axis: str = "blocks") -> CompiledKernel:
     """Compile (or fetch) the launch specialization without running it.
 
     The ``cudaModuleGetFunction`` analogue: pre-warm a specialization
@@ -255,7 +280,8 @@ def compiled(kernel: KernelDef, *, grid, block, args: dict,
     memory, or a disk artifact.
     """
     entry, _ = _entry_for(kernel, Dim3.of(grid), Dim3.of(block), args,
-                          backend, grain, dyn_shared, interpret, pool)
+                          backend, grain, dyn_shared, interpret, pool,
+                          devices, shard_axis)
     return entry
 
 
@@ -265,10 +291,12 @@ class LaunchConfig:
 
     Calling it launches: buffers go in as keyword arguments (or one
     positional dict) and the updated buffer dict comes back.  Execution
-    options that CUDA keeps out of the chevrons (backend, grain, interpret)
-    are set with :meth:`on`, which returns a re-bound config::
+    options that CUDA keeps out of the chevrons (backend, grain, interpret,
+    and for multi-device backends the shard count/axis) are set with
+    :meth:`on`, which returns a re-bound config::
 
         out = kernel[(gx, gy), (bx, by)].on(backend="pallas")(x=x, y=y)
+        out = kernel[grid, block].on(backend="shard", devices=4)(x=x)
 
     When a ``stream`` occupies the fourth chevron slot the launch is routed
     through ``stream.launch`` (async, hazard-tracked) and returns the
@@ -285,6 +313,8 @@ class LaunchConfig:
     grain: int | str = 1
     interpret: bool = True
     pool: int | None = None
+    devices: int | None = None
+    shard_axis: str = "blocks"
 
     @classmethod
     def from_chevron(cls, kernel: KernelDef, config: tuple) -> "LaunchConfig":
@@ -299,8 +329,11 @@ class LaunchConfig:
                    dyn_shared=dyn_shared, stream=stream)
 
     def on(self, **overrides) -> "LaunchConfig":
-        """Re-bind execution options: backend, grain, interpret, pool."""
-        allowed = {"backend", "grain", "interpret", "pool"}
+        """Re-bind execution options: backend, grain, interpret, pool,
+        devices (shard count for multi-device backends; None = all
+        available), shard_axis (mesh axis name)."""
+        allowed = {"backend", "grain", "interpret", "pool", "devices",
+                   "shard_axis"}
         bad = set(overrides) - allowed
         if bad:
             raise TypeError(f"LaunchConfig.on() got unexpected options "
@@ -315,17 +348,20 @@ class LaunchConfig:
                 backend=self.backend, grain=self.grain,
                 dyn_shared=self.dyn_shared,
                 args=merged or None,
-                interpret=self.interpret, pool=self.pool)
+                interpret=self.interpret, pool=self.pool,
+                devices=self.devices, shard_axis=self.shard_axis)
             return self.stream
         return _launch(self.kernel, self.grid, self.block, merged,
                        self.backend, self.grain, self.dyn_shared,
-                       self.interpret, self.pool)
+                       self.interpret, self.pool, self.devices,
+                       self.shard_axis)
 
 
 def launch(kernel: KernelDef, *, grid, block, args: dict,
            backend: str = "vector", grain: int | str = 1,
            dyn_shared: int | None = None, interpret: bool = True,
-           pool: int | None = None) -> dict:
+           pool: int | None = None, devices: int | None = None,
+           shard_axis: str = "blocks") -> dict:
     """Launch ``kernel`` over ``grid`` blocks of ``block`` threads.
 
     Legacy keyword shim over the :class:`LaunchConfig` path; ``grid`` and
@@ -333,9 +369,11 @@ def launch(kernel: KernelDef, *, grid, block, args: dict,
     global-buffer names to arrays; returns the dict with the kernel's
     written buffers replaced.  ``grain`` may be an int, "average", or
     "aggressive" (paper SIV-A heuristics; ``pool`` = worker count).
+    ``devices``/``shard_axis`` reach multi-device backends (``shard``)
+    only; single-device backends ignore them.
     """
     return _launch(kernel, Dim3.of(grid), Dim3.of(block), args, backend,
-                   grain, dyn_shared, interpret, pool)
+                   grain, dyn_shared, interpret, pool, devices, shard_axis)
 
 
 def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,

@@ -13,10 +13,67 @@ adaptation relies on two facts of the lowered execution model:
 atomicCAS has no order-free equivalent; we provide the *first-wins* variant
 (lowest thread id wins each index), which is sufficient for the lock/claim
 idioms in Crystal-style database kernels and is deterministic.
+
+**Cross-shard combining.**  The grid-serial argument above breaks once the
+*shard* backend (:mod:`repro.core.lower_shard`) spreads blocks over XLA
+devices: two blocks on different devices may hit the same output element,
+and each device only sees its own partial result.  The adaptation is the
+classic partials-plus-reduce: every shard runs its block range against the
+*launch-time* value of each written buffer, then :func:`combine_partials`
+merges the per-shard partials with a cross-device collective keyed off the
+kernel's ``KernelDef.combines`` declaration:
+
+* ``"sum"`` (default) - ``psum`` of per-shard *deltas* added back onto the
+  launch-time value.  A shard that never touched an element contributes a
+  delta of exactly zero, so this is exact for cross-block ``atomicAdd``
+  accumulation (adds commute across shards) and for disjoint writes into
+  zero-initialized buffers (delta == written value).  A disjoint
+  *overwrite* of elements holding large prior values is reconstructed as
+  ``in + (out - in)``, which rounds in floating point once ``|in|`` and
+  ``|out|`` differ by more than the mantissa - declare such buffers
+  ``"concat"`` (below) or keep them integer;
+* ``"max"`` / ``"min"`` - ``pmax``/``pmin`` of the per-shard results, the
+  cross-block ``atomicMax``/``atomicMin`` semantics;
+* ``"concat"`` - an *owned-slice* declaration: block ``b`` writes only the
+  buffer's leading-axis rows ``[b*rpb, (b+1)*rpb)`` (``rpb`` = rows /
+  n_blocks), so each shard owns its contiguous slice and the results
+  assemble with **zero cross-device communication** (the shard backend
+  shards the output instead of reducing it).  This is the fast path for
+  embarrassingly-parallel kernels: collectives rendezvous every device
+  thread, which on oversubscribed CPU hosts costs more than the compute
+  being combined.  When the grid or buffer does not divide evenly the
+  backend falls back to ``"sum"`` with a warning (exact for accumulation
+  and zero-initialized buffers; float overwrites of large prior values
+  round - see above).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
+
+#: combine modes accepted in ``KernelDef.combines``.  sum/max/min reduce
+#: via collectives (:func:`combine_partials`); concat is structural and
+#: handled by the shard backend's output sharding.
+CROSS_SHARD_COMBINES = ("sum", "max", "min", "concat")
+
+
+def combine_partials(mode: str, before, after, axis_name: str):
+    """Merge one written buffer's per-shard partials across ``axis_name``.
+
+    ``before`` is the buffer's launch-time (replicated) value, ``after``
+    the shard-local value once the shard's block range ran.  Must be called
+    inside a ``shard_map`` over ``axis_name``; the result is replicated.
+    """
+    if mode == "sum":
+        return before + lax.psum(after - before, axis_name)
+    if mode == "max":
+        return lax.pmax(after, axis_name)
+    if mode == "min":
+        return lax.pmin(after, axis_name)
+    raise ValueError(
+        f"cross-shard combine mode {mode!r} is not a collective reduction; "
+        f"reducible modes: sum/max/min (concat is resolved by the shard "
+        f"backend's output sharding, not here)")
 
 
 def atomic_add(arr, idx, val):

@@ -18,7 +18,11 @@ row in the paper's Table II):
 * ``"barrier"`` - can split at ``__syncthreads`` (loop fission);
 * ``"warp"``    - supports warp-level shuffles/votes;
 * ``"dim3"``    - accepts multi-dimensional grids/blocks (all builtins do,
-  since they iterate linearized ids).
+  since they iterate linearized ids);
+* ``"multi_device"`` - schedules blocks across XLA devices; the launch
+  path additionally passes ``devices=``/``shard_axis=`` to the builder
+  (backends without the tag keep the plain signature, so third-party
+  registrations predating the tag stay valid).
 """
 from __future__ import annotations
 
@@ -86,7 +90,7 @@ def backend_names() -> tuple[str, ...]:
 # signature (the lowerings themselves stay import-light and registry-free).
 # --------------------------------------------------------------------------
 def _register_builtins() -> None:
-    from repro.core import lower_loop, lower_vector, pallas_emit
+    from repro.core import lower_loop, lower_shard, lower_vector, pallas_emit
 
     def loop(kernel, *, grid, block, glob, grain, dyn_shared, interpret):
         return lower_loop.run(kernel, grid=grid, block=block, glob=glob,
@@ -112,11 +116,29 @@ def _register_builtins() -> None:
                                grain=grain, dyn_shared=dyn_shared,
                                interpret=interpret)
 
+    def shard(kernel, *, grid, block, glob, grain, dyn_shared, interpret,
+              devices=None, shard_axis=lower_shard.DEFAULT_AXIS):
+        return lower_shard.run(kernel, grid=grid, block=block, glob=glob,
+                               grain=grain, dyn_shared=dyn_shared,
+                               devices=devices, shard_axis=shard_axis)
+
+    def shard_vector(kernel, *, grid, block, glob, grain, dyn_shared,
+                     interpret, devices=None,
+                     shard_axis=lower_shard.DEFAULT_AXIS):
+        return lower_shard.run(kernel, grid=grid, block=block, glob=glob,
+                               grain=grain, dyn_shared=dyn_shared,
+                               devices=devices, shard_axis=shard_axis,
+                               inner="vector")
+
     register_backend("loop", loop, {"barrier", "warp", "dim3"})
     register_backend("loop_nowarp", loop_nowarp, {"barrier", "dim3"})
     register_backend("naive", naive, {"dim3"})
     register_backend("vector", vector, {"barrier", "warp", "dim3"})
     register_backend("pallas", pallas, {"barrier", "warp", "dim3"})
+    register_backend("shard", shard,
+                     {"barrier", "warp", "dim3", "multi_device"})
+    register_backend("shard_vector", shard_vector,
+                     {"barrier", "warp", "dim3", "multi_device"})
 
 
 _register_builtins()

@@ -40,17 +40,23 @@ CACHE_FORMAT_VERSION = 1
 
 
 def artifact_key(fingerprint: str, backend: str, grid, block, grain,
-                 dyn_shared, interpret, treedef, shapes) -> str:
+                 dyn_shared, interpret, treedef, shapes, *,
+                 devices=None, shard_axis: str = "blocks") -> str:
     """Stable cross-process hash of one launch specialization.
 
     Includes the lowering platform: ``jax.export`` artifacts are
     platform-specific, so a cache directory shared between e.g. a CPU and
-    a TPU machine must not serve either one the other's modules.
+    a TPU machine must not serve either one the other's modules.  The
+    process device count (plus the requested ``devices``/``shard_axis``)
+    joins the key for the same reason: a multi-device backend's artifact
+    bakes in its mesh, so a run under
+    ``--xla_force_host_platform_device_count=8`` must not serve a
+    single-device process (or vice versa).
     """
     payload = repr((CACHE_FORMAT_VERSION, jax.__version__,
-                    jax.default_backend(), fingerprint, backend,
-                    tuple(grid), tuple(block), grain, dyn_shared,
-                    interpret, str(treedef), shapes))
+                    jax.default_backend(), jax.device_count(), fingerprint,
+                    backend, tuple(grid), tuple(block), grain, dyn_shared,
+                    interpret, devices, shard_axis, str(treedef), shapes))
     return hashlib.sha256(payload.encode()).hexdigest()
 
 

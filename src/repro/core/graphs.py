@@ -65,6 +65,8 @@ class GraphNode:
     grain: int = 1
     dyn_shared: int | None = None
     interpret: bool = True
+    devices: int | None = None
+    shard_axis: str = "blocks"
     reads: tuple[str, ...] = ()
     writes: tuple[str, ...] = ()
     # h2d fields
@@ -125,7 +127,8 @@ class Graph:
     def add_kernel(self, stream, kernel: KernelDef, *, grid, block,
                    backend: str = "vector", grain=1,
                    dyn_shared: int | None = None, interpret: bool = True,
-                   pool: int | None = None) -> GraphNode:
+                   pool: int | None = None, devices: int | None = None,
+                   shard_axis: str = "blocks") -> GraphNode:
         grid, block = Dim3.of(grid), Dim3.of(block)
         heap_names = set(stream.buffers) | self.written()
         if kernel.reads is not None:
@@ -148,6 +151,7 @@ class Graph:
             label=f"{kernel.name}[{tuple(grid)},{tuple(block)}]@{backend}",
             kernel=kernel, grid=grid, block=block, backend=backend,
             grain=grain, dyn_shared=dyn_shared, interpret=interpret,
+            devices=devices, shard_axis=shard_axis,
             reads=reads, writes=writes)
         return self._commit(node)
 
@@ -259,7 +263,9 @@ class GraphExec:
                                 block=node.block, glob=dict(glob),
                                 grain=node.grain,
                                 dyn_shared=node.dyn_shared,
-                                interpret=node.interpret)
+                                interpret=node.interpret,
+                                **api.device_opts(entry, node.devices,
+                                                  node.shard_axis))
                 for b in node.writes:
                     glob[b] = out[b]
             elif node.kind == "h2d":

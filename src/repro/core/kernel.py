@@ -189,6 +189,14 @@ class KernelDef:
     and degrades to conservative whole-heap ordering.
     ``est_block_work`` is the per-block instruction estimate used by the
     aggressive-grain heuristic (Table V '# inst' column).
+    ``combines`` declares, per written buffer, how the *shard* backend
+    merges per-shard partial results across devices (see
+    :mod:`repro.core.atomics`): ``"sum"`` (the default - exact for
+    cross-block ``atomicAdd`` accumulation and disjoint writes into
+    zero-initialized buffers; float overwrites of large prior values
+    round), ``"max"``/``"min"`` (cross-block ``atomicMax``/``atomicMin``),
+    or ``"concat"`` (owned-slice writes, zero communication and always
+    exact).
 
     Subscripting a kernel is the triple-chevron launch syntax::
 
@@ -209,6 +217,7 @@ class KernelDef:
     reads: Sequence[str] | None = None
     uses_warp: bool = False
     est_block_work: float = 1e6
+    combines: Mapping[str, str] = dataclasses.field(default_factory=dict)
 
     def __getitem__(self, config):
         """``kernel[grid, block(, dyn_shared(, stream))]`` -> LaunchConfig."""
@@ -255,7 +264,8 @@ class KernelDef:
                        None if self.reads is None else tuple(self.reads),
                        tuple(sorted((n, (tuple(s), jnp.dtype(d).name))
                                     for n, (s, d) in self.shared.items())),
-                       self.uses_warp)).encode())
+                       self.uses_warp,
+                       tuple(sorted(self.combines.items())))).encode())
         for stage in self.stages:
             _hash_callable(h, stage, depth=0)
         return h.hexdigest()
@@ -313,6 +323,20 @@ class CompiledKernel:
     def __call__(self, *leaves):
         self.hits += 1
         return self.fn(*leaves)
+
+
+def block_range_limit(bid_start, count: int, n_blocks: int):
+    """Exclusive upper block-id bound for a block-range view.
+
+    ``min(bid_start + count, n_blocks)`` for python ints and traced
+    scalars alike.  Grain fetch loops round ``count`` up to a grain
+    multiple, and under the shard backend the rounded tail slots belong
+    to the *next* shard's range - both lowerings must mask against this
+    limit, not just against the grid size.
+    """
+    if isinstance(bid_start, int):
+        return min(bid_start + count, n_blocks)
+    return jnp.minimum(bid_start + count, n_blocks)
 
 
 def check_priv_chunk(priv: Any, chunk: int, kernel_name: str, stage_idx: int):

@@ -33,6 +33,7 @@ from repro.core.kernel import (
     Ctx,
     KernelDef,
     UnsupportedKernel,
+    block_range_limit,
     check_priv_chunk,
 )
 
@@ -143,11 +144,21 @@ def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None,
 
 
 def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
-        allow_fission=True, allow_warp=True):
-    """Full launch: fetch-loop x grain-loop over blocks (paper Fig. 5/6)."""
+        allow_fission=True, allow_warp=True, bid_start=0, count=None):
+    """Full launch: fetch-loop x grain-loop over blocks (paper Fig. 5/6).
+
+    ``bid_start``/``count`` select a *block-range view* of the grid: the
+    fetch loops cover ``count`` linear block ids starting at ``bid_start``
+    (a python int or a traced scalar - the shard backend feeds each
+    device's range offset).  Blocks keep their **global** linear id, so
+    ``ctx.bid``/``ctx.bid3`` read exactly as on a whole-grid launch; ids
+    past ``grid.size`` are masked out.  Defaults cover the whole grid.
+    """
     grid, block = Dim3.of(grid), Dim3.of(block)
     n_blocks = grid.size
-    n_fetch = -(-n_blocks // grain)
+    count = n_blocks if count is None else count
+    n_fetch = -(-count // grain)
+    limit = block_range_limit(bid_start, count, n_blocks)
 
     def run_bid(bid, g):
         return run_block(
@@ -158,8 +169,8 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
 
     def fetch_body(f, g):
         def grain_body(i, g_):
-            bid = f * grain + i
-            return lax.cond(bid < n_blocks, lambda x: run_bid(bid, x),
+            bid = bid_start + f * grain + i
+            return lax.cond(bid < limit, lambda x: run_bid(bid, x),
                             lambda x: x, g_)
         return lax.fori_loop(0, grain, grain_body, g)
 

@@ -18,7 +18,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.dim3 import Dim3
-from repro.core.kernel import BlockState, Ctx, KernelDef, check_priv_chunk
+from repro.core.kernel import (
+    BlockState,
+    Ctx,
+    KernelDef,
+    block_range_limit,
+    check_priv_chunk,
+)
 
 
 def _make_ctx(bid, block, grid):
@@ -46,10 +52,16 @@ def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None):
     return st.glob
 
 
-def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None):
+def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
+        bid_start=0, count=None):
+    """``bid_start``/``count`` select a block-range view of the grid (same
+    contract as :func:`repro.core.lower_loop.run`): blocks keep their
+    global linear id, ids past ``grid.size`` are masked."""
     grid, block = Dim3.of(grid), Dim3.of(block)
     n_blocks = grid.size
-    n_fetch = -(-n_blocks // grain)
+    count = n_blocks if count is None else count
+    n_fetch = -(-count // grain)
+    limit = block_range_limit(bid_start, count, n_blocks)
 
     def run_bid(bid, g):
         return run_block(kernel, bid, block=block, grid=grid, glob=g,
@@ -57,8 +69,8 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None):
 
     def fetch_body(f, g):
         def grain_body(i, g_):
-            bid = f * grain + i
-            return lax.cond(bid < n_blocks, lambda x: run_bid(bid, x),
+            bid = bid_start + f * grain + i
+            return lax.cond(bid < limit, lambda x: run_bid(bid, x),
                             lambda x: x, g_)
         return lax.fori_loop(0, grain, grain_body, g)
 

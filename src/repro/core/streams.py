@@ -272,7 +272,8 @@ class Stream:
                backend: str = "vector", grain: int | str = 1,
                dyn_shared: int | None = None,
                args: dict[str, Any] | None = None,
-               interpret: bool = True, pool: int | None = None):
+               interpret: bool = True, pool: int | None = None,
+               devices: int | None = None, shard_axis: str = "blocks"):
         """Async launch over the stream's heap.
 
         The kernel always sees the full heap (device memory); a non-None
@@ -295,7 +296,7 @@ class Stream:
             self._capture.add_kernel(
                 self, kernel, grid=grid, block=block, backend=backend,
                 grain=grain, dyn_shared=dyn_shared, interpret=interpret,
-                pool=pool)
+                pool=pool, devices=devices, shard_axis=shard_axis)
             return
         if args:
             missing = [n for n in args if n not in self.buffers]
@@ -312,7 +313,8 @@ class Stream:
         self._wait_foreign_writers(set(buf_args) | set(kernel.writes))
         new = api.launch(kernel, grid=grid, block=block, args=buf_args,
                          backend=backend, grain=grain, dyn_shared=dyn_shared,
-                         interpret=interpret, pool=pool)
+                         interpret=interpret, pool=pool, devices=devices,
+                         shard_axis=shard_axis)
         self.buffers.update({n: new[n] for n in kernel.writes})
         self._mark_pending(kernel.writes)
         self.stats.launches += 1

@@ -1,0 +1,329 @@
+"""Shard backend (multi-device block scheduler) + LaunchConfig error paths.
+
+Bit-equality here runs at whatever device count the process has: a plain
+``pytest`` run covers the single-shard fallback, the CI ``test-multidevice``
+job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) covers real
+sharding, and ``test_multidevice_subprocess`` forces a 4-device child even
+when the parent process is single-device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Stream,
+    UnknownBackend,
+    UnsupportedKernel,
+    api,
+    get_backend,
+    launch,
+)
+from repro.core.cuda_suite import build_suite, make_vecadd
+from repro.core.kernel import KernelDef
+
+SUITE = build_suite(scale=1)
+
+
+def _run(entry, backend, **kw):
+    args = entry.make_args(np.random.default_rng(7))
+    out = launch(entry.kernel, grid=entry.grid, block=entry.block,
+                 args={k: jnp.asarray(v) for k, v in args.items()},
+                 backend=backend, dyn_shared=entry.dyn_shared, **kw)
+    return out, entry.reference(args)
+
+
+def make_blockmax(n: int, block: int, combines) -> KernelDef:
+    """Every block atomically maxes into out[0] (cross-shard collision)."""
+
+    def stage(ctx, st):
+        gid = ctx.bid * ctx.block_dim + ctx.tid
+        v = st.glob["x"][jnp.minimum(gid, n - 1)]
+        v = jnp.where(gid < n, v, -jnp.inf)
+        idx = jnp.zeros(v.shape, jnp.int32)
+        return st.set_glob(out=ctx.atomic_max(st.glob["out"], idx, v))
+
+    return KernelDef("blockmax", (stage,), writes=("out",), reads=("x", "out"),
+                     combines=combines)
+
+
+def make_blocksum(n_blocks: int, block: int, combines) -> KernelDef:
+    """y[bid] = sum of the block's thread values (owned-slice write)."""
+    n = n_blocks * block
+
+    def stage(ctx, st):
+        gid = ctx.bid * ctx.block_dim + ctx.tid
+        v = jnp.where(gid < n, st.glob["x"][jnp.minimum(gid, n - 1)], 0.0)
+        bid = jnp.full(v.shape, ctx.bid)
+        return st.set_glob(y=ctx.atomic_add(st.glob["y"], bid, v))
+
+    return KernelDef("blocksum", (stage,), writes=("y",), reads=("x", "y"),
+                     combines=combines)
+
+
+# --- shard-vs-loop bit-equality across the whole suite ----------------------
+@pytest.mark.parametrize("entry", SUITE, ids=lambda e: e.name)
+def test_shard_equals_loop_bitwise(entry):
+    o1, _ = _run(entry, "loop")
+    o2, _ = _run(entry, "shard")
+    for k in entry.kernel.writes:
+        assert np.asarray(o1[k]).tobytes() == np.asarray(o2[k]).tobytes(), (
+            f"{entry.name}: buffer {k} differs between loop and shard "
+            f"at device_count={jax.device_count()}")
+
+
+@pytest.mark.parametrize("grain", [2, 3, "average"])
+def test_shard_grain_equals_loop(grain):
+    """Grain fetch loops round a shard's range up; the tail slots must be
+    masked as the NEXT shard's blocks, not executed twice (regression:
+    grain=2 on a 3-block shard double-ran the neighbor's first block)."""
+    n_blocks, block = 6, 64
+    k = make_blocksum(n_blocks, block, combines={})
+    rng = np.random.default_rng(9)
+    args = {"x": jnp.asarray(rng.standard_normal(n_blocks * block,
+                                                 dtype=np.float32)),
+            "y": jnp.zeros(n_blocks, jnp.float32)}
+    o1 = launch(k, grid=n_blocks, block=block, args=args, backend="loop")
+    o2 = launch(k, grid=n_blocks, block=block, args=args, backend="shard",
+                grain=grain, pool=2)
+    assert np.asarray(o1["y"]).tobytes() == np.asarray(o2["y"]).tobytes()
+
+
+def test_shard_vector_equals_vector():
+    """The vector lowering shards too (shard_vector backend)."""
+    for entry in SUITE:
+        o1, _ = _run(entry, "vector")
+        o2, _ = _run(entry, "shard_vector")
+        for k in entry.kernel.writes:
+            np.testing.assert_allclose(
+                np.asarray(o1[k]), np.asarray(o2[k]), rtol=1e-5, atol=1e-5,
+                err_msg=f"{entry.name}: vector vs shard_vector")
+
+
+def test_shard_devices_1_is_loop_fallback():
+    entry = SUITE[0]
+    o1, want = _run(entry, "shard", devices=1)
+    for k, v in want.items():
+        np.testing.assert_allclose(np.asarray(o1[k]), v, rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_shard_registered_with_capabilities():
+    b = get_backend("shard")
+    assert b.supports("multi_device", "barrier", "warp", "dim3")
+    assert not get_backend("loop").supports("multi_device")
+
+
+# --- combine declarations ----------------------------------------------------
+def test_combine_max_mode():
+    n, block, grid = 1024, 64, 16
+    k = make_blockmax(n, block, combines={"out": "max"})
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(n, dtype=np.float32)
+    out = launch(k, grid=grid, block=block,
+                 args={"x": jnp.asarray(x),
+                       "out": jnp.full((1,), -np.inf, jnp.float32)},
+                 backend="shard")
+    np.testing.assert_allclose(np.asarray(out["out"])[0], x.max(), rtol=1e-6)
+
+
+def test_combine_concat_mode_and_fallback():
+    import warnings as warnings_mod
+
+    rng = np.random.default_rng(5)
+    for n_blocks in (16, 13):      # 13: indivisible -> warned sum fallback
+        k = make_blocksum(n_blocks, 64, combines={"y": "concat"})
+        x = rng.standard_normal(n_blocks * 64, dtype=np.float32)
+        with warnings_mod.catch_warnings(record=True) as caught:
+            warnings_mod.simplefilter("always")
+            out = launch(k, grid=n_blocks, block=64,
+                         args={"x": jnp.asarray(x),
+                               "y": jnp.zeros(n_blocks, jnp.float32)},
+                         backend="shard")
+        want = x.reshape(n_blocks, 64).sum(1, dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(out["y"]), want, rtol=1e-4)
+        # a real multi-device degrade (grid not divisible) must warn
+        n_dev = min(jax.device_count(), n_blocks)
+        expect_warn = n_dev > 1 and n_blocks % n_dev != 0
+        got_warn = any("concat" in str(w.message) for w in caught)
+        assert got_warn == expect_warn, (n_blocks, n_dev, got_warn)
+
+
+def test_combine_unknown_mode_rejected():
+    k = make_blocksum(8, 64, combines={"y": "xor"})
+    with pytest.raises(UnsupportedKernel, match="combine mode"):
+        launch(k, grid=8, block=64,
+               args={"x": jnp.zeros(512, jnp.float32),
+                     "y": jnp.zeros(8, jnp.float32)}, backend="shard")
+
+
+def test_combine_on_unwritten_buffer_rejected():
+    k = make_blocksum(8, 64, combines={"x": "sum"})
+    with pytest.raises(UnsupportedKernel, match="non-written"):
+        launch(k, grid=8, block=64,
+               args={"x": jnp.zeros(512, jnp.float32),
+                     "y": jnp.zeros(8, jnp.float32)}, backend="shard")
+
+
+def test_combines_changes_fingerprint():
+    a = make_blocksum(8, 64, combines={})
+    b = make_blocksum(8, 64, combines={"y": "concat"})
+    assert a.fingerprint() != b.fingerprint()
+
+
+# --- device options plumbing -------------------------------------------------
+def test_devices_out_of_range_rejected():
+    k = make_vecadd(256)
+    args = {"a": jnp.zeros(256, jnp.float32), "b": jnp.zeros(256, jnp.float32),
+            "c": jnp.zeros(256, jnp.float32)}
+    with pytest.raises(ValueError, match="devices must be >= 1"):
+        launch(k, grid=2, block=128, args=args, backend="shard", devices=0)
+    too_many = jax.device_count() + 1
+    with pytest.raises(ValueError, match="available"):
+        launch(k, grid=2, block=128, args=args, backend="shard",
+               devices=too_many)
+
+
+def test_devices_in_cache_key():
+    api.cache_clear()
+    k = make_vecadd(256)
+    args = {"a": jnp.zeros(256, jnp.float32), "b": jnp.zeros(256, jnp.float32),
+            "c": jnp.zeros(256, jnp.float32)}
+    launch(k, grid=2, block=128, args=args, backend="shard", devices=1)
+    launch(k, grid=2, block=128, args=args, backend="shard", devices=1)
+    launch(k, grid=2, block=128, args=args, backend="shard", devices=1,
+           shard_axis="workers")
+    stats = api.cache_stats()
+    assert stats.misses == 2 and stats.hits == 1
+    api.cache_clear()
+
+
+def test_single_device_backends_ignore_device_opts():
+    """devices= must not break - or re-specialize - plain backends: the
+    device options are normalized out of their cache key."""
+    api.cache_clear()
+    k = make_vecadd(256)
+    args = {"a": jnp.zeros(256, jnp.float32), "b": jnp.zeros(256, jnp.float32),
+            "c": jnp.zeros(256, jnp.float32)}
+    launch(k, grid=2, block=128, args=args, backend="loop")
+    launch(k, grid=2, block=128, args=args, backend="loop", devices=1,
+           shard_axis="workers")
+    stats = api.cache_stats()
+    assert stats.hits == 1 and stats.misses == 1
+    api.cache_clear()
+
+
+# --- graph capture of sharded launches ---------------------------------------
+def test_graph_replays_sharded_launch():
+    n, block = 1024, 128
+    grid = -(-n // block)
+    k = make_vecadd(n)
+    rng = np.random.default_rng(11)
+    bufs = {"a": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "b": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+            "c": jnp.zeros(n, jnp.float32)}
+    s = Stream(dict(bufs))
+    g = s.begin_capture()
+    k[grid, block, None, s].on(backend="shard")()
+    s.end_capture()
+    node = g.nodes[0]
+    assert node.backend == "shard" and node.devices is None
+    ex = g.instantiate(s.buffers)
+    ex.launch(s)
+    np.testing.assert_allclose(
+        s.memcpy_d2h("c"),
+        np.asarray(bufs["a"]) + np.asarray(bufs["b"]), rtol=1e-6)
+
+
+# --- LaunchConfig error paths ------------------------------------------------
+def test_chevron_not_a_tuple():
+    k = make_vecadd(64)
+    with pytest.raises(TypeError, match="launch config"):
+        k[64]
+
+
+def test_chevron_wrong_arity():
+    k = make_vecadd(64)
+    with pytest.raises(TypeError, match="launch config"):
+        k[1, 64, None, None, "extra"]
+
+
+def test_chevron_bad_dyn_shared_slot():
+    k = make_vecadd(64)
+    with pytest.raises(TypeError, match="dyn_shared"):
+        k[1, 64, "not-an-int"]
+
+
+def test_chevron_bad_dim3():
+    k = make_vecadd(64)
+    with pytest.raises(ValueError, match="dim3"):
+        k[(1, 2, 3, 4), 64]
+    with pytest.raises(ValueError, match=">= 1"):
+        k[0, 64]
+
+
+def test_extern_shared_requires_dyn_shared():
+    entry = [e for e in SUITE if e.name == "reverse"][0]
+    cfg = entry.kernel[entry.grid, entry.block]        # no shmem slot
+    with pytest.raises(ValueError, match="dyn_shared"):
+        cfg(d=jnp.zeros(512, jnp.int32))
+
+
+def test_unknown_backend_name():
+    k = make_vecadd(64)
+    cfg = k[1, 64].on(backend="nope")
+    with pytest.raises(UnknownBackend, match="nope"):
+        cfg(a=jnp.zeros(64, jnp.float32), b=jnp.zeros(64, jnp.float32),
+            c=jnp.zeros(64, jnp.float32))
+
+
+def test_on_rejects_unknown_options():
+    k = make_vecadd(64)
+    with pytest.raises(TypeError, match="unexpected"):
+        k[1, 64].on(device=4)        # typo'd option name
+
+
+# --- real multi-device execution, even under a 1-device parent ---------------
+_CHILD = r"""
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.device_count()
+from repro.core import launch
+from repro.core.cuda_suite import build_suite
+names = {"histogram", "matmul_tiled", "reduce_warp"}
+for e in build_suite(1):
+    if e.name not in names:
+        continue
+    args = e.make_args(np.random.default_rng(42))
+    j = {k: jnp.asarray(v) for k, v in args.items()}
+    o1 = launch(e.kernel, grid=e.grid, block=e.block, args=j,
+                backend="loop", dyn_shared=e.dyn_shared)
+    for grain in (1, 2):
+        o2 = launch(e.kernel, grid=e.grid, block=e.block, args=j,
+                    backend="shard", dyn_shared=e.dyn_shared, grain=grain)
+        for k in e.kernel.writes:
+            assert np.asarray(o1[k]).tobytes() == \
+                np.asarray(o2[k]).tobytes(), (e.name, grain)
+print("child-ok")
+"""
+
+
+def test_multidevice_subprocess():
+    """Bit-equality under genuine 4-way sharding (forced host devices)."""
+    if jax.device_count() >= 4:      # multidevice CI job covers it in-process
+        pytest.skip("parent already multi-device")
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), os.pardir, "src")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)),
+    )
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "child-ok" in proc.stdout
