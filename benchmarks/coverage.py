@@ -13,11 +13,10 @@ same feature-driven gaps.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import UnsupportedKernel, backend_names
-from repro.core.cuda_suite import build_suite
+from repro.core.cuda_suite import build_suite, run_entry
 
 
 def frameworks() -> tuple[str, ...]:
@@ -27,19 +26,18 @@ def frameworks() -> tuple[str, ...]:
 
 def run() -> dict:
     suite = build_suite(scale=1)
-    rng = np.random.default_rng(0)
     table = {}
     for e in suite:
         row = {}
-        args = e.make_args(rng)
-        want = e.reference(args)
-        cfg = e.kernel[e.grid, e.block, e.dyn_shared]
         for fw in frameworks():
             try:
-                out = cfg.on(backend=fw)(
-                    {k: jnp.asarray(v) for k, v in args.items()})
-                ok = all(np.allclose(np.asarray(out[k]), v, rtol=2e-5,
-                                     atol=2e-5) for k, v in want.items())
+                # run_entry drives chain entries (wavefront kernels) through
+                # their full LaunchChain, so "correct" means the whole
+                # Rodinia-style workload agreed, not just one launch
+                out, want = run_entry(e, fw, rng=np.random.default_rng(0))
+                tol = max(e.tol, 2e-5)
+                ok = all(np.allclose(np.asarray(out[k]), v, rtol=tol,
+                                     atol=tol) for k, v in want.items())
                 row[fw] = "correct" if ok else "incorrect"
             except UnsupportedKernel:
                 row[fw] = "unsupport"

@@ -26,10 +26,21 @@ from repro.core.graphs import Graph, GraphError, GraphExec
 from repro.core.kernel import (
     WARP_SIZE,
     BlockState,
+    ChainStep,
     CompiledKernel,
     Ctx,
     KernelDef,
+    LaunchChain,
     UnsupportedKernel,
+)
+from repro.core.memory import (
+    ConstArray,
+    Space,
+    UnsupportedSpace,
+    cuda_malloc,
+    cuda_memcpy_d2h,
+    cuda_memcpy_h2d,
+    cuda_memcpy_to_symbol,
 )
 from repro.core.streams import Event, Policy, Runtime, Stream
 
@@ -41,11 +52,14 @@ def __getattr__(name):
 
 
 __all__ = [
-    "BACKENDS", "Backend", "BlockState", "CacheStats", "CompiledKernel",
-    "Ctx", "Dim3", "Event", "Graph", "GraphError", "GraphExec", "KernelDef",
-    "LaunchConfig", "Policy", "Runtime", "Stream", "UnknownBackend",
-    "UnsupportedKernel", "WARP_SIZE", "backend_names", "cache_clear",
-    "cache_resize", "cache_size", "cache_stats", "compiled", "coverage",
-    "disable_disk_cache", "enable_disk_cache", "get_backend", "launch",
-    "register_backend", "supported", "unregister_backend",
+    "BACKENDS", "Backend", "BlockState", "CacheStats", "ChainStep",
+    "CompiledKernel", "ConstArray", "Ctx", "Dim3", "Event", "Graph",
+    "GraphError", "GraphExec", "KernelDef", "LaunchChain", "LaunchConfig",
+    "Policy", "Runtime", "Space", "Stream", "UnknownBackend",
+    "UnsupportedKernel", "UnsupportedSpace", "WARP_SIZE", "backend_names",
+    "cache_clear", "cache_resize", "cache_size", "cache_stats", "compiled",
+    "coverage", "cuda_malloc", "cuda_memcpy_d2h", "cuda_memcpy_h2d",
+    "cuda_memcpy_to_symbol", "disable_disk_cache", "enable_disk_cache",
+    "get_backend", "launch", "register_backend", "supported",
+    "unregister_backend",
 ]

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.core import backends as backends_mod
 from repro.core import compile_cache
 from repro.core import grain as grain_mod
+from repro.core import memory as memory_mod
 from repro.core import packing
 from repro.core.backends import backend_names, get_backend, register_backend
 from repro.core.dim3 import Dim3
@@ -238,6 +239,9 @@ def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
     opts = device_opts(get_backend(backend), devices, shard_axis)
     devices = opts.get("devices")
     shard_axis = opts.get("shard_axis", "blocks")
+    # CONST-space enforcement: reject ConstArray bindings on written
+    # buffers, unwrap the rest (honored here so every backend obeys)
+    args = memory_mod.resolve_launch_args(kernel, args)
     leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
     shapes = tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves)
     key = (backend, grid, block, grain, dyn_shared, interpret, treedef,

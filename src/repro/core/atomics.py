@@ -77,30 +77,90 @@ def combine_partials(mode: str, before, after, axis_name: str):
 
 
 def atomic_add(arr, idx, val):
-    return arr.at[idx].add(val)
+    return arr.at[idx].add(val, mode="drop")
 
 
 def atomic_max(arr, idx, val):
-    return arr.at[idx].max(val)
+    return arr.at[idx].max(val, mode="drop")
 
 
 def atomic_min(arr, idx, val):
-    return arr.at[idx].min(val)
+    return arr.at[idx].min(val, mode="drop")
+
+
+def _first_occurrence(idx):
+    """Mask of chunk positions that are the first occurrence of their index."""
+    n = idx.shape[0]
+    eq = idx[None, :] == idx[:, None]                       # [t, t']
+    lower = jnp.tril(jnp.ones((n, n), dtype=bool), k=-1)
+    return ~jnp.any(eq & lower, axis=1)
+
+
+def _serial_rmw(arr, idx, update):
+    """Serialize a read-modify-write over the thread chunk in thread order.
+
+    ``update(t, cur)`` returns the value to store at ``idx[t]`` given the
+    currently-observed ``cur`` (return ``cur`` to store nothing).  Indices
+    at or past ``arr.shape[0]`` mark inactive threads: they observe a
+    clamped gather but always store the observed value back (a no-op).
+    Returns ``(new_arr, old)`` where ``old[t]`` is the value thread ``t``
+    observed - exactly CUDA's return-the-previous-value contract, under
+    the deterministic thread-order serialization.
+    """
+    idx = jnp.asarray(idx)
+    size = arr.shape[0]
+
+    def body(t, carry):
+        a, old = carry
+        cur = a[jnp.minimum(idx[t], size - 1)]
+        new = jnp.where(idx[t] < size, update(t, cur), cur)
+        a = a.at[jnp.minimum(idx[t], size - 1)].set(new)
+        return a, old.at[t].set(cur)
+
+    old0 = jnp.zeros(idx.shape, arr.dtype)
+    return lax.fori_loop(0, idx.shape[0], body, (arr, old0))
+
+
+def atomic_cas(arr, idx, cmp, val):
+    """``atomicCAS``: returns ``(new_arr, old)`` with serialized semantics.
+
+    Threads of the chunk execute in thread order: each observes the value
+    its predecessors left at ``arr[idx[t]]`` and swaps in ``val[t]`` iff it
+    equals ``cmp[t]``.  ``old[t] == cmp[t]`` therefore tells thread ``t``
+    whether *it* performed the store - the claim/visited-flag idiom of
+    Rodinia BFS (``if (atomicCAS(&visited[n], 0, 1) == 0) ...``) - and the
+    serialization makes the unordered CUDA primitive deterministic.
+
+    Inactive threads pass ``idx >= arr.shape[0]`` (never stores) or a
+    ``cmp`` that cannot match (e.g. ``-1`` against a 0/1 flag array).
+    """
+    cmp = jnp.broadcast_to(jnp.asarray(cmp), jnp.shape(idx))
+    val = jnp.broadcast_to(jnp.asarray(val), jnp.shape(idx))
+    return _serial_rmw(arr, idx,
+                       lambda t, cur: jnp.where(cur == cmp[t], val[t], cur))
+
+
+def atomic_exch(arr, idx, val):
+    """``atomicExch``: returns ``(new_arr, old)``, serialized thread order.
+
+    Every active thread stores its value; each observes what its
+    predecessors left behind, and the last duplicate's value survives -
+    a valid serialization of the unordered CUDA exchange, made
+    deterministic.
+    """
+    val = jnp.broadcast_to(jnp.asarray(val), jnp.shape(idx))
+    return _serial_rmw(arr, idx, lambda t, cur: val[t])
 
 
 def atomic_cas_first(arr, idx, cmp, val):
     """compare-and-swap, first-wins across duplicate indices.
 
     For each position ``idx[t]``: if ``arr[idx[t]] == cmp[t]`` the value of
-    the *lowest* t whose compare succeeds is stored.  Implemented by masking
-    duplicate indices so only the first occurrence scatters.
+    the *lowest* t whose compare succeeds is stored.  Like
+    :func:`atomic_cas` but returns only the updated array (legacy form).
     """
     idx = jnp.asarray(idx)
-    n = idx.shape[0]
-    # first occurrence of each index among the chunk
-    eq = idx[None, :] == idx[:, None]                       # [t, t']
-    lower = jnp.tril(jnp.ones((n, n), dtype=bool), k=-1)
-    is_first = ~jnp.any(eq & lower, axis=1)
+    is_first = _first_occurrence(idx)
     old = arr[idx]
     ok = (old == cmp) & is_first
     safe_idx = jnp.where(ok, idx, arr.shape[0])             # OOB drops

@@ -4,7 +4,7 @@ Each entry is a kernel authored in the CuPBoP-JAX IR plus a pure-numpy oracle.
 The suite spans the CUDA features whose support differentiates frameworks in
 the paper's Table II:
 
-| kernel              | paper analogue          | features exercised           |
+| kernel              | Rodinia counterpart     | features exercised           |
 |---------------------|-------------------------|------------------------------|
 | vecadd              | Listing 1               | plain SPMD                   |
 | reverse             | Listing 3 dynamicReverse| dynamic __shared__, barrier  |
@@ -16,6 +16,20 @@ the paper's Table II:
 | softmax_row         | attention primitive     | two barriers                 |
 | scan_block          | pathfinder/scan         | Hillis-Steele, 2x log2 stages|
 | transpose_tiled     | SVI-C reordering demo   | shared staging, coalescing   |
+| stencil2d           | hotspot                 | 2-D dim3 grid x block, halo  |
+| bfs_frontier        | bfs                     | atomicCAS flags, ballot-count, __constant__, launch chain |
+| pathfinder          | pathfinder              | row-wavefront DP across launches, halo barrier |
+| needle_nw           | nw (Needleman-Wunsch)   | anti-diagonal wavefront across launches |
+| backprop_layer      | backprop                | barrier tree + __constant__, owned-slice writes |
+| lud_diag            | lud (diagonal step)     | many barriers, in-shared pivoting, owned-slice writes |
+| srad_step           | srad                    | stencil + two-phase global reduction chain |
+
+The last six are the Rodinia-mini expansion: wavefront kernels iterate via
+:class:`repro.core.kernel.LaunchChain` (host-driven inter-launch
+dependencies), BFS claims nodes with ``atomicCAS`` visited flags and counts
+its next frontier with ``__syncthreads_count``, and the read-only inputs of
+bfs/backprop ride in ``__constant__`` space (:class:`repro.core.memory
+.ConstArray`).
 """
 from __future__ import annotations
 
@@ -26,7 +40,9 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernel import KernelDef
+from repro.core import memory
+from repro.core.api import launch
+from repro.core.kernel import ChainStep, KernelDef, LaunchChain
 
 OOB = 1 << 30  # out-of-bounds sentinel for mode="drop" stores
 
@@ -39,6 +55,7 @@ def _gid(ctx):
 # vecadd (paper Listing 1)
 # --------------------------------------------------------------------------
 def make_vecadd(n: int) -> KernelDef:
+    """dtype-agnostic: output dtype follows the input arrays."""
     def stage(ctx, st):
         gid = _gid(ctx)
         val = st.glob["a"][gid] + st.glob["b"][gid]
@@ -95,7 +112,7 @@ def make_histogram(n: int, nbins: int, total_threads: int,
 # --------------------------------------------------------------------------
 # reduce_shared: classic barrier-tree block reduction (log2(block) stages)
 # --------------------------------------------------------------------------
-def make_reduce_shared(n: int, block: int) -> KernelDef:
+def make_reduce_shared(n: int, block: int, dtype=jnp.float32) -> KernelDef:
     assert block & (block - 1) == 0, "block must be a power of two"
 
     def load(ctx, st):
@@ -124,14 +141,14 @@ def make_reduce_shared(n: int, block: int) -> KernelDef:
     stages.append(store)
     return KernelDef(
         "reduce_shared", tuple(stages), writes=("out",), reads=("x", "out"),
-        shared={"s": ((block,), jnp.float32)}, est_block_work=block * 8.0,
+        shared={"s": ((block,), dtype)}, est_block_work=block * 8.0,
     )
 
 
 # --------------------------------------------------------------------------
 # reduce_warp: shuffle-based reduction (warp-level features; COX/CuPBoP only)
 # --------------------------------------------------------------------------
-def make_reduce_warp(n: int, block: int) -> KernelDef:
+def make_reduce_warp(n: int, block: int, dtype=jnp.float32) -> KernelDef:
     nwarps = block // 32
 
     def warp_phase(ctx, st):
@@ -156,7 +173,7 @@ def make_reduce_warp(n: int, block: int) -> KernelDef:
     return KernelDef(
         "reduce_warp", (warp_phase, final_phase), writes=("out",),
         reads=("x", "out"),
-        shared={"s": ((nwarps,), jnp.float32)}, uses_warp=True,
+        shared={"s": ((nwarps,), dtype)}, uses_warp=True,
         est_block_work=block * 4.0,
     )
 
@@ -165,7 +182,8 @@ def make_reduce_warp(n: int, block: int) -> KernelDef:
 # matmul_tiled: shared-memory tiled GEMM; acc is a register demoted across
 # 2*KT barriers (the hard case for fission correctness)
 # --------------------------------------------------------------------------
-def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
+def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8,
+                      dtype=jnp.float32) -> KernelDef:
     assert m % tile == 0 and n % tile == 0 and k % tile == 0
     kt = k // tile
     ntiles_n = n // tile
@@ -176,7 +194,7 @@ def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
         return ty, tx, by * tile + ty, bx * tile + tx
 
     def init(ctx, st):
-        return st.with_priv({"acc": jnp.zeros(ctx.tid.shape, jnp.float32)})
+        return st.with_priv({"acc": jnp.zeros(ctx.tid.shape, dtype)})
 
     def make_load(kk):
         def load(ctx, st):
@@ -203,8 +221,8 @@ def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
     stages.append(store)
     return KernelDef(
         "matmul_tiled", tuple(stages), writes=("c",), reads=("a", "b", "c"),
-        shared={"sa": ((tile, tile), jnp.float32),
-                "sb": ((tile, tile), jnp.float32)},
+        shared={"sa": ((tile, tile), dtype),
+                "sb": ((tile, tile), dtype)},
         est_block_work=tile * tile * k * 2.0,
     )
 
@@ -212,7 +230,7 @@ def make_matmul_tiled(m: int, n: int, k: int, tile: int = 8) -> KernelDef:
 # --------------------------------------------------------------------------
 # stencil1d (hotspot-like 3-point stencil with shared halo)
 # --------------------------------------------------------------------------
-def make_stencil1d(n: int, block: int) -> KernelDef:
+def make_stencil1d(n: int, block: int, dtype=jnp.float32) -> KernelDef:
     def load(ctx, st):
         gid = _gid(ctx)
         x = st.glob["x"]
@@ -233,7 +251,7 @@ def make_stencil1d(n: int, block: int) -> KernelDef:
 
     return KernelDef(
         "stencil1d", (load, compute), writes=("y",), reads=("x", "y"),
-        shared={"s": ((block + 2,), jnp.float32)}, est_block_work=block * 6.0,
+        shared={"s": ((block + 2,), dtype)}, est_block_work=block * 6.0,
     )
 
 
@@ -284,7 +302,7 @@ def make_stencil2d(h: int, w: int, tile_y: int = 8,
 # --------------------------------------------------------------------------
 # softmax_row: one block per row, two barriers (max then sum)
 # --------------------------------------------------------------------------
-def make_softmax_row(block: int) -> KernelDef:
+def make_softmax_row(block: int, dtype=jnp.float32) -> KernelDef:
     def load(ctx, st):
         v = st.glob["x"][ctx.bid, ctx.tid]
         return st.set_shared(s=st.shared["s"].at[ctx.tid].set(v))
@@ -304,7 +322,7 @@ def make_softmax_row(block: int) -> KernelDef:
     return KernelDef(
         "softmax_row", (load, exps, normalize), writes=("y",),
         reads=("x", "y"),
-        shared={"s": ((block,), jnp.float32), "p": ((block,), jnp.float32)},
+        shared={"s": ((block,), dtype), "p": ((block,), dtype)},
         est_block_work=block * 10.0,
     )
 
@@ -312,7 +330,7 @@ def make_softmax_row(block: int) -> KernelDef:
 # --------------------------------------------------------------------------
 # scan_block: Hillis-Steele inclusive prefix sum (2 stages per level)
 # --------------------------------------------------------------------------
-def make_scan_block(block: int) -> KernelDef:
+def make_scan_block(block: int, dtype=jnp.float32) -> KernelDef:
     assert block & (block - 1) == 0
 
     def load(ctx, st):
@@ -347,7 +365,7 @@ def make_scan_block(block: int) -> KernelDef:
     stages.append(store)
     return KernelDef(
         "scan_block", tuple(stages), writes=("y",), reads=("x", "y"),
-        shared={"s": ((block,), jnp.float32)},
+        shared={"s": ((block,), dtype)},
         est_block_work=block * math.log2(block) * 4.0,
     )
 
@@ -355,7 +373,8 @@ def make_scan_block(block: int) -> KernelDef:
 # --------------------------------------------------------------------------
 # transpose_tiled: shared-staged transpose (coalescing demo, SVI-C)
 # --------------------------------------------------------------------------
-def make_transpose_tiled(h: int, w: int, tile: int = 8) -> KernelDef:
+def make_transpose_tiled(h: int, w: int, tile: int = 8,
+                         dtype=jnp.float32) -> KernelDef:
     assert h % tile == 0 and w % tile == 0
     ntx = w // tile
 
@@ -375,8 +394,305 @@ def make_transpose_tiled(h: int, w: int, tile: int = 8) -> KernelDef:
 
     return KernelDef(
         "transpose_tiled", (load, store), writes=("y",), reads=("x", "y"),
-        shared={"t": ((tile, tile), jnp.float32)},
+        shared={"t": ((tile, tile), dtype)},
         est_block_work=tile * tile * 4.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# bfs_frontier (Rodinia bfs): level-synchronous BFS.  Each launch expands the
+# current frontier; threads claim unvisited neighbors with an atomicCAS on
+# the visited-flag array, winners publish dist/next-frontier, and the block
+# counts its wins with __syncthreads_count into a host-readable stop flag.
+# --------------------------------------------------------------------------
+def make_bfs_frontier(n: int, deg: int) -> KernelDef:
+    def expand(ctx, st):
+        t = _gid(ctx)
+        lvl = st.glob["level"][0]
+        in_f = st.glob["frontier"][t] == 1
+        visited = st.glob["visited"]
+        nxt, dist = st.glob["nxt"], st.glob["dist"]
+        edges = st.glob["edges"]
+        won_any = jnp.zeros(t.shape, jnp.bool_)
+        for k in range(deg):
+            nbr = edges[t, k]                        # == n for padding slots
+            attempt = in_f & (nbr < n)
+            # inactive threads CAS a shared out-of-range slot with a compare
+            # value that can never match a 0/1 flag, so they neither write
+            # nor shadow a real claimant in the first-occurrence mask
+            idx = jnp.where(attempt, nbr, n)
+            cmp = jnp.where(attempt, 0, -1)
+            visited, old = ctx.atomic_cas(visited, idx, cmp,
+                                          jnp.ones_like(idx))
+            won = attempt & (old == 0)
+            widx = jnp.where(won, nbr, OOB)
+            nxt = nxt.at[widx].set(1, mode="drop")
+            dist = dist.at[widx].set(lvl + 1, mode="drop")
+            won_any = won_any | won
+        nwin = ctx.syncthreads_count(won_any)
+        active = ctx.atomic_add(st.glob["active"],
+                                jnp.where(ctx.tid == 0, 0, OOB), nwin)
+        return st.set_glob(visited=visited, nxt=nxt, dist=dist,
+                           active=active)
+
+    return KernelDef(
+        "bfs_frontier", (expand,),
+        writes=("visited", "nxt", "dist", "active"),
+        reads=("edges", "frontier", "visited", "nxt", "dist", "active",
+               "level"),
+        uses_warp=True,
+        combines={"visited": "max", "nxt": "max", "dist": "max",
+                  "active": "sum"},
+        est_block_work=deg * 64.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# pathfinder (Rodinia pathfinder): row-wavefront dynamic programming.  One
+# launch per wall row; each block stages the previous row into shared with a
+# halo, takes the 3-neighbor min, and adds the current row's weights.  The
+# host chain ping-pongs src/dst between launches.
+# --------------------------------------------------------------------------
+def make_pathfinder(cols: int, block: int, dtype=jnp.int32) -> KernelDef:
+    def load(ctx, st):
+        col = _gid(ctx)
+        src = st.glob["src"]
+        s = st.shared["s"].at[ctx.tid + 1].set(
+            src[jnp.clip(col, 0, cols - 1)])
+        left = src[jnp.clip(col - 1, 0, cols - 1)]
+        right = src[jnp.clip(col + 1, 0, cols - 1)]
+        s = s.at[jnp.where(ctx.tid == 0, 0, OOB)].set(left, mode="drop")
+        s = s.at[jnp.where(ctx.tid == block - 1, block + 1, OOB)].set(
+            right, mode="drop")
+        return st.set_shared(s=s)
+
+    def compute(ctx, st):
+        col = _gid(ctx)
+        r = st.glob["row"][0]
+        s = st.shared["s"]
+        best = jnp.minimum(jnp.minimum(s[ctx.tid], s[ctx.tid + 1]),
+                           s[ctx.tid + 2])
+        v = st.glob["wall"][r, jnp.clip(col, 0, cols - 1)] + best
+        idx = jnp.where(col < cols, col, OOB)
+        return st.set_glob(dst=st.glob["dst"].at[idx].set(v, mode="drop"))
+
+    return KernelDef(
+        "pathfinder", (load, compute), writes=("dst",),
+        reads=("wall", "src", "dst", "row"),
+        shared={"s": ((block + 2,), dtype)},
+        combines={"dst": "sum"},       # dst re-zeroed per launch: exact
+        est_block_work=block * 6.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# needle_nw (Rodinia nw): Needleman-Wunsch anti-diagonal wavefront.  One
+# launch per anti-diagonal; each cell on the diagonal depends only on the
+# two previous diagonals, already final in global memory.
+# --------------------------------------------------------------------------
+def make_needle_nw(n: int, penalty: int = 2) -> KernelDef:
+    """dtype-agnostic: score/sim dtype follows the input arrays."""
+    def stage(ctx, st):
+        t = _gid(ctx)
+        d = st.glob["diag"][0]
+        lo = jnp.maximum(1, d - n)
+        hi = jnp.minimum(n, d - 1)
+        valid = t <= hi - lo
+        i = jnp.clip(t + lo, 1, n)
+        j = jnp.clip(d - i, 1, n)
+        score, sim = st.glob["score"], st.glob["sim"]
+        dv = score[i - 1, j - 1] + sim[i - 1, j - 1]
+        up = score[i - 1, j] - penalty
+        lf = score[i, j - 1] - penalty
+        v = jnp.maximum(dv, jnp.maximum(up, lf))
+        idx = jnp.where(valid, i, OOB)
+        return st.set_glob(score=score.at[idx, j].set(v, mode="drop"))
+
+    return KernelDef(
+        "needle_nw", (stage,), writes=("score",),
+        reads=("score", "sim", "diag"),
+        combines={"score": "sum"},     # each cell written once, from zero
+        est_block_work=64.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# backprop_layer (Rodinia backprop): forward pass of one layer (barrier-tree
+# dot product + sigmoid) fused with the weight-delta update.  Weights,
+# inputs, and deltas ride in __constant__ space; each block owns one hidden
+# unit, so both outputs are owned-slice ("concat") writes.
+# --------------------------------------------------------------------------
+def make_backprop_layer(in_n: int, out_n: int, lr: float = 0.3) -> KernelDef:
+    assert in_n & (in_n - 1) == 0, "in_n must be a power of two"
+
+    def load(ctx, st):
+        j = ctx.bid
+        v = st.glob["inp"][ctx.tid] * st.glob["w"][j, ctx.tid]
+        return st.set_shared(s=st.shared["s"].at[ctx.tid].set(v))
+
+    def make_level(offset):
+        def level(ctx, st):
+            s = st.shared["s"]
+            partner = s[ctx.tid + offset]
+            new = jnp.where(ctx.tid < offset, s[ctx.tid] + partner,
+                            s[ctx.tid])
+            return st.set_shared(s=s.at[ctx.tid].set(new))
+        return level
+
+    def store(ctx, st):
+        j = ctx.bid
+        total = st.shared["s"][0] + st.glob["bias"][j]
+        h = 1.0 / (1.0 + jnp.exp(-total))
+        idx = jnp.where(ctx.tid == 0, j, OOB)
+        hidden = st.glob["hidden"].at[idx].set(h, mode="drop")
+        wo = st.glob["w_out"].at[j, ctx.tid].set(
+            st.glob["w"][j, ctx.tid]
+            + lr * st.glob["delta"][j] * st.glob["inp"][ctx.tid])
+        return st.set_glob(hidden=hidden, w_out=wo)
+
+    stages = [load]
+    off = in_n // 2
+    while off >= 1:
+        stages.append(make_level(off))
+        off //= 2
+    stages.append(store)
+    return KernelDef(
+        "backprop_layer", tuple(stages), writes=("hidden", "w_out"),
+        reads=("inp", "w", "bias", "delta", "hidden", "w_out"),
+        shared={"s": ((in_n,), jnp.float32)},
+        combines={"hidden": "concat", "w_out": "concat"},
+        est_block_work=in_n * 10.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# lud_diag (Rodinia lud): the diagonal-block LU step.  Each block factors
+# its own b x b tile in shared memory - b-1 barrier-separated elimination
+# steps (Doolittle, no pivoting) - then writes L\U back to its owned rows.
+# --------------------------------------------------------------------------
+def make_lud_diag(ntiles: int, b: int) -> KernelDef:
+    def load(ctx, st):
+        row = ctx.bid * b + ctx.tid
+        return st.set_shared(s=st.shared["s"].at[ctx.tid, :].set(
+            st.glob["a"][row, :]))
+
+    def make_step(k):
+        def step(ctx, st):
+            s = st.shared["s"]
+            i = ctx.tid
+            m = s[i, k] / s[k, k]
+            cols = jnp.arange(b)
+            upd = jnp.where(cols[None, :] > k, s[k, :][None, :], 0.0)
+            newrow = s[i, :] - m[:, None] * upd
+            newrow = newrow.at[:, k].set(m)
+            ridx = jnp.where(i > k, i, OOB)
+            return st.set_shared(s=s.at[ridx, :].set(newrow, mode="drop"))
+        return step
+
+    def store(ctx, st):
+        row = ctx.bid * b + ctx.tid
+        lu = st.glob["lu"].at[row, :].set(st.shared["s"][ctx.tid, :])
+        return st.set_glob(lu=lu)
+
+    stages = [load] + [make_step(k) for k in range(b - 1)] + [store]
+    return KernelDef(
+        "lud_diag", tuple(stages), writes=("lu",), reads=("a", "lu"),
+        shared={"s": ((b, b), jnp.float32)},
+        combines={"lu": "concat"},
+        est_block_work=b * b * b * 2.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# srad_step (Rodinia srad): speckle-reducing anisotropic diffusion.  Each
+# iteration is a two-kernel chain: a barrier-tree statistics reduction into
+# per-block partials (Rodinia reduces partials on the host; here the update
+# kernel folds them), then a 2-D dim3 stencil update with the diffusion
+# coefficient derived from the image-wide statistics.
+# --------------------------------------------------------------------------
+def make_srad_stats(h: int, w: int, block: int) -> KernelDef:
+    npix = h * w
+    assert block & (block - 1) == 0
+
+    def load(ctx, st):
+        gid = _gid(ctx)
+        g = jnp.minimum(gid, npix - 1)
+        v = jnp.where(gid < npix, st.glob["x"][g // w, g % w], 0.0)
+        s1 = st.shared["s1"].at[ctx.tid].set(v)
+        s2 = st.shared["s2"].at[ctx.tid].set(v * v)
+        return st.set_shared(s1=s1, s2=s2)
+
+    def make_level(offset):
+        def level(ctx, st):
+            s1, s2 = st.shared["s1"], st.shared["s2"]
+            lower = ctx.tid < offset
+            n1 = jnp.where(lower, s1[ctx.tid] + s1[ctx.tid + offset],
+                           s1[ctx.tid])
+            n2 = jnp.where(lower, s2[ctx.tid] + s2[ctx.tid + offset],
+                           s2[ctx.tid])
+            return st.set_shared(s1=s1.at[ctx.tid].set(n1),
+                                 s2=s2.at[ctx.tid].set(n2))
+        return level
+
+    def store(ctx, st):
+        idx = jnp.where(ctx.tid == 0, ctx.bid, OOB)
+        ps = st.glob["psum"].at[idx].set(st.shared["s1"][0], mode="drop")
+        pq = st.glob["psq"].at[idx].set(st.shared["s2"][0], mode="drop")
+        return st.set_glob(psum=ps, psq=pq)
+
+    stages = [load]
+    off = block // 2
+    while off >= 1:
+        stages.append(make_level(off))
+        off //= 2
+    stages.append(store)
+    return KernelDef(
+        "srad_stats", tuple(stages), writes=("psum", "psq"),
+        reads=("x", "psum", "psq"),
+        shared={"s1": ((block,), jnp.float32),
+                "s2": ((block,), jnp.float32)},
+        combines={"psum": "sum", "psq": "sum"},
+        est_block_work=block * 8.0,
+    )
+
+
+def make_srad_update(h: int, w: int, lam: float = 0.2, tile_y: int = 8,
+                     tile_x: int = 8) -> KernelDef:
+    npix = h * w
+
+    def stage(ctx, st):
+        tx, ty, _ = ctx.tid3
+        bx, by, _ = ctx.bid3
+        r, c = by * tile_y + ty, bx * tile_x + tx
+        x = st.glob["x"]
+        total = jnp.sum(st.glob["psum"])
+        totsq = jnp.sum(st.glob["psq"])
+        mean = total / npix
+        var = totsq / npix - mean * mean
+        q0 = var / (mean * mean)
+        rc, cc = jnp.clip(r, 0, h - 1), jnp.clip(c, 0, w - 1)
+        at = lambda rr, cx: x[jnp.clip(rr, 0, h - 1), jnp.clip(cx, 0, w - 1)]
+        xc = x[rc, cc]
+        dN = at(rc - 1, cc) - xc
+        dS = at(rc + 1, cc) - xc
+        dW = at(rc, cc - 1) - xc
+        dE = at(rc, cc + 1) - xc
+        g2 = (dN * dN + dS * dS + dW * dW + dE * dE) / (xc * xc)
+        ll = (dN + dS + dW + dE) / xc
+        num = 0.5 * g2 - 0.0625 * (ll * ll)
+        den = (1.0 + 0.25 * ll) * (1.0 + 0.25 * ll)
+        q = num / den
+        cd = 1.0 / (1.0 + (q - q0) / (q0 * (1.0 + q0)))
+        cd = jnp.clip(cd, 0.0, 1.0)
+        v = xc + 0.25 * lam * cd * (dN + dS + dW + dE)
+        idx = jnp.where((r < h) & (c < w), rc, OOB)
+        return st.set_glob(y=st.glob["y"].at[idx, cc].set(v, mode="drop"))
+
+    return KernelDef(
+        "srad_update", (stage,), writes=("y",),
+        reads=("x", "psum", "psq", "y"),
+        combines={"y": "sum"},         # y re-zeroed per launch: exact
+        est_block_work=tile_y * tile_x * 24.0,
     )
 
 
@@ -385,6 +701,22 @@ def make_transpose_tiled(h: int, w: int, tile: int = 8) -> KernelDef:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class SuiteEntry:
+    """One suite workload: kernel(s), launch geometry, inputs, and oracle.
+
+    ``chain`` is set for wavefront workloads driven by a
+    :class:`~repro.core.kernel.LaunchChain` (the entry-level
+    ``kernel``/``grid``/``block`` then describe the first step, for
+    display); ``const`` names buffers bound in ``__constant__`` space at
+    launch; ``tol`` is the oracle comparison tolerance;
+    ``nondeterministic_shard`` names scratch buffers whose *bit* pattern
+    legitimately differs between the shard and single-device backends
+    (e.g. a deduplicated-on-one-device win counter) - excluded from
+    cross-backend bit comparisons, never from semantic checks; ``rodinia``
+    records the benchmark counterpart for the coverage table;
+    ``dim3_free`` marks kernels that read only linearized ids, so any
+    ``Dim3`` factorization of the same grid size is equivalent.
+    """
+
     name: str
     features: tuple[str, ...]
     kernel: KernelDef
@@ -393,6 +725,56 @@ class SuiteEntry:
     dyn_shared: int | None
     make_args: Callable[[np.random.Generator], dict]
     reference: Callable[[dict], dict]
+    chain: LaunchChain | None = None
+    const: tuple[str, ...] = ()
+    tol: float = 2e-5
+    rodinia: str = ""
+    dim3_free: bool = True
+    nondeterministic_shard: tuple[str, ...] = ()
+
+
+def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
+              args: dict | None = None, grain=1, devices=None, pool=None,
+              interpret: bool = True, grid=None, block=None,
+              with_reference: bool = True):
+    """Execute a suite entry end-to-end under one backend.
+
+    The single place that knows how to *drive* an entry: plain entries are
+    one launch; chain entries replay their :class:`LaunchChain` with every
+    step routed through the same backend/grain/device options; buffers
+    named in ``entry.const`` are bound as ``__constant__``
+    (:class:`~repro.core.memory.ConstArray`).  Returns ``(out, want)`` -
+    the final buffer dict and the numpy oracle's expectation
+    (``with_reference=False`` skips the oracle and returns ``want=None``:
+    wall-clock benchmarks must not time the pure-Python reference).
+    """
+    if args is None:
+        args = entry.make_args(rng if rng is not None
+                               else np.random.default_rng(42))
+    want = entry.reference(args) if with_reference else None
+    bufs = {}
+    for k, v in args.items():
+        arr = jnp.asarray(v)
+        bufs[k] = memory.ConstArray(arr) if k in entry.const else arr
+    kw = dict(backend=backend, grain=grain, devices=devices, pool=pool,
+              interpret=interpret)
+    if entry.chain is None:
+        out = launch(entry.kernel,
+                     grid=entry.grid if grid is None else grid,
+                     block=entry.block if block is None else block,
+                     args=bufs, dyn_shared=entry.dyn_shared, **kw)
+    else:
+        if grid is not None or block is not None:
+            raise ValueError(
+                f"entry {entry.name}: geometry overrides are per-step for "
+                f"chain entries; rebuild the chain instead")
+
+        def launch_step(step, b):
+            return launch(step.kernel, grid=step.grid, block=step.block,
+                          args=b, dyn_shared=step.dyn_shared, **kw)
+
+        out = entry.chain.run(launch_step, bufs)
+    return out, want
 
 
 def build_suite(scale: int = 1) -> list[SuiteEntry]:
@@ -407,6 +789,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                    "b": r.standard_normal(n, dtype=np.float32),
                    "c": np.zeros(n, np.float32)},
         lambda a: {"c": a["a"] + a["b"]},
+        rodinia="(Listing 1)",
     ))
 
     rn = 512
@@ -414,6 +797,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         "reverse", ("barrier", "dyn_shared"), make_reverse(), 1, rn, rn,
         lambda r: {"d": r.integers(0, 100, rn).astype(np.int32)},
         lambda a: {"d": a["d"][::-1].copy()},
+        rodinia="(Listing 3)",
     ))
 
     nbins, tt = 64, 16 * block
@@ -425,6 +809,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                    "hist": np.zeros(nbins, np.int32)},
         lambda a: {"hist": np.bincount(a["x"], minlength=nbins)
                    .astype(np.int32)},
+        rodinia="Hetero-Mark HIST",
     ))
 
     rs_n, rs_b = 2048 * scale, 256
@@ -434,6 +819,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda r: {"x": r.standard_normal(rs_n, dtype=np.float32),
                    "out": np.zeros(-(-rs_n // rs_b), np.float32)},
         lambda a: {"out": a["x"].reshape(-1, rs_b).sum(1)},
+        rodinia="srad/kmeans reductions",
     ))
 
     entries.append(SuiteEntry(
@@ -442,6 +828,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda r: {"x": r.standard_normal(rs_n, dtype=np.float32),
                    "out": np.zeros(-(-rs_n // rs_b), np.float32)},
         lambda a: {"out": a["x"].reshape(-1, rs_b).sum(1)},
+        rodinia="Crystal q11-q13",
     ))
 
     mm = 32 * max(1, scale // 4)
@@ -452,6 +839,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                    "b": r.standard_normal((mm, mm), dtype=np.float32),
                    "c": np.zeros((mm, mm), np.float32)},
         lambda a: {"c": a["a"] @ a["b"]},
+        rodinia="lud/gemm",
     ))
 
     st_n = 4096 * scale
@@ -464,6 +852,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                          + 0.5 * a["x"]
                          + 0.25 * a["x"][np.clip(np.arange(st_n) + 1, None,
                                                  st_n - 1)])},
+        rodinia="hotspot (1-D)",
     ))
 
     sh, sw = 32, 64 * scale
@@ -479,6 +868,8 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda r: {"x": r.standard_normal((sh, sw), dtype=np.float32),
                    "y": np.zeros((sh, sw), np.float32)},
         _stencil2d_ref,
+        rodinia="hotspot",
+        dim3_free=False,
     ))
 
     rows = 32 * scale
@@ -490,6 +881,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda a: {"y": (np.exp(a["x"] - a["x"].max(1, keepdims=True))
                          / np.exp(a["x"] - a["x"].max(1, keepdims=True))
                          .sum(1, keepdims=True))},
+        rodinia="attention primitive",
     ))
 
     sc_b = 128
@@ -500,6 +892,7 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda r: {"x": r.standard_normal(sc_n, dtype=np.float32),
                    "y": np.zeros(sc_n, np.float32)},
         lambda a: {"y": np.cumsum(a["x"].reshape(-1, sc_b), 1).reshape(-1)},
+        rodinia="pathfinder/scan",
     ))
 
     th, tw = 64, 64 * scale
@@ -509,6 +902,265 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
         lambda r: {"x": r.standard_normal((th, tw), dtype=np.float32),
                    "y": np.zeros((tw, th), np.float32)},
         lambda a: {"y": a["x"].T.copy()},
+        rodinia="(SVI-C reordering)",
     ))
 
+    entries.append(entry_bfs_frontier())
+    entries.append(entry_pathfinder(scale))
+    entries.append(entry_needle_nw())
+    entries.append(entry_backprop_layer())
+    entries.append(entry_lud_diag())
+    entries.append(entry_srad_step(scale))
+
     return entries
+
+
+# --------------------------------------------------------------------------
+# Rodinia-mini entry builders (exported so the conformance harness can
+# rebuild dtype variants of the parameterizable ones)
+# --------------------------------------------------------------------------
+def entry_bfs_frontier(n: int = 64, deg: int = 4) -> SuiteEntry:
+    kernel = make_bfs_frontier(n, deg)
+    block, grid = 32, n // 32     # 32-thread blocks: __syncthreads_count
+
+    def margs(r):
+        edges = np.full((n, deg), n, np.int32)
+        edges[:, 0] = (np.arange(n) + 1) % n      # ring: everything reachable
+        for k in range(1, deg):
+            edges[:, k] = r.integers(0, n, n)     # random chords
+        frontier = np.zeros(n, np.int32)
+        frontier[0] = 1
+        visited = np.zeros(n, np.int32)
+        visited[0] = 1
+        dist = np.full(n, -1, np.int32)
+        dist[0] = 0
+        return {"edges": edges, "frontier": frontier, "visited": visited,
+                "dist": dist, "nxt": np.zeros(n, np.int32),
+                "active": np.zeros(1, np.int32),
+                "level": np.zeros(1, np.int32)}
+
+    def ref(a):
+        edges = np.asarray(a["edges"])
+        dist = np.full(n, -1, np.int32)
+        dist[0] = 0
+        frontier = [0]
+        while frontier:
+            nxtf = []
+            for u in frontier:
+                for v in edges[u]:
+                    if v < n and dist[v] < 0:
+                        dist[v] = dist[u] + 1
+                        nxtf.append(int(v))
+            frontier = nxtf
+        return {"dist": dist, "visited": (dist >= 0).astype(np.int32)}
+
+    def prepare(it, bufs):
+        if it == 0:
+            return {}
+        return {"frontier": bufs["nxt"],
+                "nxt": jnp.zeros_like(bufs["nxt"]),
+                "active": jnp.zeros_like(bufs["active"]),
+                "level": jnp.full((1,), it, jnp.int32)}
+
+    chain = LaunchChain(
+        steps=(ChainStep(kernel, grid, block, prepare=prepare),),
+        repeat=n,                 # upper bound; stop flag exits early
+        stop=lambda bufs: int(np.asarray(bufs["active"])[0]) == 0,
+    )
+    return SuiteEntry(
+        "bfs_frontier", ("atomic_cas", "warp", "const", "chain"),
+        kernel, grid, block, None, margs, ref,
+        chain=chain, const=("edges",), rodinia="bfs",
+        dim3_free=False,
+        # the win counter dedups per device: shards that independently
+        # claim the same node both count it (loop counts it once)
+        nondeterministic_shard=("active",),
+    )
+
+
+def entry_pathfinder(scale: int = 1, dtype=jnp.int32) -> SuiteEntry:
+    rows, cols, block = 6, 256 * scale, 64
+    kernel = make_pathfinder(cols, block, dtype=dtype)
+    grid = cols // block
+    npdt = np.dtype(dtype)
+
+    def margs(r):
+        # integer-valued weights stay exact under every dtype variant
+        wall = r.integers(0, 10, (rows, cols)).astype(npdt)
+        return {"wall": wall, "src": wall[0].copy(),
+                "dst": np.zeros(cols, npdt),
+                "row": np.ones(1, np.int32)}
+
+    def ref(a):
+        wall = np.asarray(a["wall"])
+        cur = np.asarray(a["src"]).copy()
+        idx = np.arange(cols)
+        for r in range(1, rows):
+            left = cur[np.clip(idx - 1, 0, cols - 1)]
+            right = cur[np.clip(idx + 1, 0, cols - 1)]
+            cur = wall[r] + np.minimum(np.minimum(left, cur), right)
+        return {"dst": cur}
+
+    def prepare(it, bufs):
+        upd = {"row": jnp.full((1,), it + 1, jnp.int32),
+               "dst": jnp.zeros_like(bufs["dst"])}
+        if it:
+            upd["src"] = bufs["dst"]
+        return upd
+
+    chain = LaunchChain(
+        steps=(ChainStep(kernel, grid, block, prepare=prepare),),
+        repeat=rows - 1,
+    )
+    return SuiteEntry(
+        "pathfinder", ("barrier", "chain"), kernel, grid, block, None,
+        margs, ref, chain=chain, rodinia="pathfinder", dim3_free=False,
+    )
+
+
+def entry_needle_nw(n: int = 32, penalty: int = 2,
+                    dtype=jnp.int32) -> SuiteEntry:
+    block = 16
+    grid = n // block
+    kernel = make_needle_nw(n, penalty)
+    npdt = np.dtype(dtype)
+
+    def margs(r):
+        # integer-valued similarity scores stay exact under f32 too
+        sim = r.integers(-3, 4, (n, n)).astype(npdt)
+        score = np.zeros((n + 1, n + 1), npdt)
+        score[0, :] = -penalty * np.arange(n + 1)
+        score[:, 0] = -penalty * np.arange(n + 1)
+        return {"score": score, "sim": sim, "diag": np.full(1, 2, np.int32)}
+
+    def ref(a):
+        sim = np.asarray(a["sim"])
+        s = np.asarray(a["score"]).copy()
+        for i in range(1, n + 1):
+            for j in range(1, n + 1):
+                s[i, j] = max(s[i - 1, j - 1] + sim[i - 1, j - 1],
+                              s[i - 1, j] - penalty,
+                              s[i, j - 1] - penalty)
+        return {"score": s}
+
+    chain = LaunchChain(
+        steps=(ChainStep(
+            kernel, grid, block,
+            prepare=lambda it, bufs: {"diag": jnp.full((1,), it + 2,
+                                                       jnp.int32)}),),
+        repeat=2 * n - 1,
+    )
+    return SuiteEntry(
+        "needle_nw", ("chain",), kernel, grid, block, None, margs, ref,
+        chain=chain, rodinia="nw", dim3_free=False,
+    )
+
+
+def entry_backprop_layer(in_n: int = 64, out_n: int = 16,
+                          lr: float = 0.3) -> SuiteEntry:
+    kernel = make_backprop_layer(in_n, out_n, lr)
+
+    def margs(r):
+        return {"inp": r.standard_normal(in_n, dtype=np.float32),
+                "w": r.standard_normal((out_n, in_n),
+                                       dtype=np.float32) * 0.5,
+                "bias": r.standard_normal(out_n, dtype=np.float32),
+                "delta": r.standard_normal(out_n, dtype=np.float32),
+                "hidden": np.zeros(out_n, np.float32),
+                "w_out": np.zeros((out_n, in_n), np.float32)}
+
+    def ref(a):
+        w, inp = np.asarray(a["w"]), np.asarray(a["inp"])
+        hidden = 1.0 / (1.0 + np.exp(-(w @ inp + a["bias"])))
+        w_out = w + lr * np.asarray(a["delta"])[:, None] * inp[None, :]
+        return {"hidden": hidden.astype(np.float32),
+                "w_out": w_out.astype(np.float32)}
+
+    return SuiteEntry(
+        "backprop_layer", ("barrier", "const"), kernel, out_n, in_n, None,
+        margs, ref, const=("inp", "w", "bias", "delta"),
+        rodinia="backprop",
+    )
+
+
+def entry_lud_diag(ntiles: int = 8, b: int = 16) -> SuiteEntry:
+    kernel = make_lud_diag(ntiles, b)
+
+    def margs(r):
+        a = 0.1 * r.standard_normal((ntiles * b, b)).astype(np.float32)
+        for t in range(ntiles):                 # diagonally dominant tiles
+            a[t * b:(t + 1) * b] += 4.0 * np.eye(b, dtype=np.float32)
+        return {"a": a, "lu": np.zeros((ntiles * b, b), np.float32)}
+
+    def ref(a):
+        src = np.asarray(a["a"])
+        lu = np.zeros_like(src)
+        for t in range(ntiles):
+            m = src[t * b:(t + 1) * b].copy()
+            for k in range(b - 1):
+                m[k + 1:, k] = m[k + 1:, k] / m[k, k]
+                m[k + 1:, k + 1:] -= np.outer(m[k + 1:, k], m[k, k + 1:])
+            lu[t * b:(t + 1) * b] = m
+        return {"lu": lu}
+
+    return SuiteEntry(
+        "lud_diag", ("barrier",), kernel, ntiles, b, None, margs, ref,
+        tol=1e-4, rodinia="lud",
+    )
+
+
+def entry_srad_step(scale: int = 1, iters: int = 2,
+                     lam: float = 0.2) -> SuiteEntry:
+    h, w, block = 32, 64 * scale, 128
+    npix = h * w
+    grid1 = npix // block
+    stats_k = make_srad_stats(h, w, block)
+    update_k = make_srad_update(h, w, lam)
+
+    def margs(r):
+        return {"x": np.exp(0.1 * r.standard_normal((h, w))
+                            ).astype(np.float32),
+                "y": np.zeros((h, w), np.float32),
+                "psum": np.zeros(grid1, np.float32),
+                "psq": np.zeros(grid1, np.float32)}
+
+    def ref(a):
+        x = np.asarray(a["x"]).astype(np.float32).copy()
+        for _ in range(iters):
+            total = x.sum(dtype=np.float32)
+            totsq = (x * x).sum(dtype=np.float32)
+            mean = total / npix
+            var = totsq / npix - mean * mean
+            q0 = var / (mean * mean)
+            xp = np.pad(x, 1, mode="edge")
+            dn = xp[:-2, 1:-1] - x
+            ds = xp[2:, 1:-1] - x
+            dw = xp[1:-1, :-2] - x
+            de = xp[1:-1, 2:] - x
+            g2 = (dn * dn + ds * ds + dw * dw + de * de) / (x * x)
+            ll = (dn + ds + dw + de) / x
+            num = 0.5 * g2 - 0.0625 * (ll * ll)
+            den = (1.0 + 0.25 * ll) * (1.0 + 0.25 * ll)
+            q = num / den
+            cd = np.clip(1.0 / (1.0 + (q - q0) / (q0 * (1.0 + q0))), 0, 1)
+            x = (x + 0.25 * lam * cd * (dn + ds + dw + de)
+                 ).astype(np.float32)
+        return {"y": x}
+
+    def prep_stats(it, bufs):
+        if it == 0:
+            return {}
+        return {"x": bufs["y"], "y": jnp.zeros_like(bufs["y"]),
+                "psum": jnp.zeros_like(bufs["psum"]),
+                "psq": jnp.zeros_like(bufs["psq"])}
+
+    chain = LaunchChain(
+        steps=(ChainStep(stats_k, grid1, block, prepare=prep_stats),
+               ChainStep(update_k, (w // 8, h // 8), (8, 8))),
+        repeat=iters,
+    )
+    return SuiteEntry(
+        "srad_step", ("barrier", "dim3", "chain"), stats_k, grid1, block,
+        None, margs, ref, chain=chain, tol=1e-4, rodinia="srad",
+        dim3_free=False,
+    )

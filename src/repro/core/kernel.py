@@ -156,6 +156,15 @@ class Ctx:
         from repro.core import warp as _warp
         return _warp.reduce(val, op)
 
+    def syncthreads_count(self, pred):
+        """``__syncthreads_count``: block-wide count of true predicates.
+
+        Requires the thread chunk to span the whole block (always true
+        under vector/pallas; under the loop lowering only for 32-thread
+        blocks in warp mode - the classic blockDim==warpSize idiom)."""
+        from repro.core import warp as _warp
+        return _warp.syncthreads_count(pred, self.block_dim)
+
     # ---- atomics (TPU adaptation: deterministic scatter / grid-serial) -----
     def atomic_add(self, arr, idx, val):
         from repro.core import atomics as _atomics
@@ -164,6 +173,18 @@ class Ctx:
     def atomic_max(self, arr, idx, val):
         from repro.core import atomics as _atomics
         return _atomics.atomic_max(arr, idx, val)
+
+    def atomic_min(self, arr, idx, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_min(arr, idx, val)
+
+    def atomic_cas(self, arr, idx, cmp, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_cas(arr, idx, cmp, val)
+
+    def atomic_exch(self, arr, idx, val):
+        from repro.core import atomics as _atomics
+        return _atomics.atomic_exch(arr, idx, val)
 
     def atomic_cas_first(self, arr, idx, cmp, val):
         from repro.core import atomics as _atomics
@@ -269,6 +290,62 @@ class KernelDef:
         for stage in self.stages:
             _hash_callable(h, stage, depth=0)
         return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainStep:
+    """One launch of a :class:`LaunchChain`.
+
+    ``prepare`` runs host-side *before* the launch and returns a dict of
+    buffer overrides merged into the heap - the analogue of the host code
+    between CUDA launches (bump the iteration scalar, ping-pong swap the
+    src/dst pointers, re-zero a per-iteration accumulator).  It receives
+    ``(iteration, buffers)`` and must not mutate ``buffers``.
+    """
+
+    kernel: "KernelDef"
+    grid: Any
+    block: Any
+    dyn_shared: int | None = None
+    prepare: Callable[[int, dict], dict] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchChain:
+    """Inter-launch dependency idiom for iterative wavefront kernels.
+
+    Rodinia's wavefront codes (pathfinder, needle, bfs, srad) re-launch
+    one or two kernels from a host loop, each launch consuming the
+    previous launch's writes - the dependency lives *between* launches,
+    not between stages of one kernel.  A ``LaunchChain`` makes that idiom
+    declarative: ``steps`` run in order, the whole sequence ``repeat``
+    times, with ``stop(buffers)`` checked host-side between iterations
+    (the analogue of Rodinia BFS reading back its ``stop`` flag).
+
+    The chain is backend-agnostic: the caller supplies ``launch_step``,
+    which runs one :class:`ChainStep` under whatever backend/grain/device
+    options the caller chose, so the same chain sweeps identically under
+    loop/vector/pallas/shard lowerings (how the conformance harness
+    replays wavefront kernels per backend).  Kernels stay constant across
+    iterations - per-iteration values travel through small device buffers
+    set by ``prepare`` - so every launch after the first hits the
+    compiled-launch cache.
+    """
+
+    steps: Sequence[ChainStep]
+    repeat: int = 1
+    stop: Callable[[dict], bool] | None = None
+
+    def run(self, launch_step: Callable[[ChainStep, dict], dict],
+            bufs: dict) -> dict:
+        for it in range(self.repeat):
+            if it and self.stop is not None and self.stop(bufs):
+                break
+            for step in self.steps:
+                if step.prepare is not None:
+                    bufs = {**bufs, **step.prepare(it, bufs)}
+                bufs = {**bufs, **launch_step(step, bufs)}
+        return bufs
 
 
 def _hash_callable(h, fn: Callable, depth: int) -> None:

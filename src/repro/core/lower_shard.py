@@ -83,6 +83,19 @@ def _combine_modes(kernel: KernelDef) -> dict[str, str]:
         raise UnsupportedKernel(
             f"kernel {kernel.name}: combines declared for non-written "
             f"buffer(s) {sorted(stray)} (writes: {tuple(kernel.writes)})")
+    if kernel.combines:
+        # A partial declaration is almost certainly a bug: the author
+        # thought about cross-shard merging and forgot a buffer, and the
+        # implicit "sum" default is exact only for accumulation/zero-init
+        # writes.  All-or-nothing: declare every written buffer, or none.
+        missing = set(kernel.writes) - set(kernel.combines)
+        if missing:
+            raise UnsupportedKernel(
+                f"kernel {kernel.name}: combines declares "
+                f"{sorted(kernel.combines)} but is missing written "
+                f"buffer(s) {sorted(missing)}; declare a combine mode for "
+                f"every written buffer (use 'sum' for the default) or for "
+                f"none")
     return modes
 
 

@@ -11,6 +11,21 @@
 ``cuda_malloc``/``cuda_memcpy`` are the runtime-library replacements of
 Fig. 3: on the CPU/TPU backend they are plain allocation + device transfer,
 while the same user code linked against the CUDA runtime would hit the GPU.
+
+Spaces are *honored*, not just recorded:
+
+* ``GLOBAL``/``LOCAL`` allocate a plain HBM buffer (local memory is spilled
+  thread-private state - on the targets here it is just heap);
+* ``SHARED`` raises: ``__shared__`` memory is block-scoped and lives in the
+  kernel's ``KernelDef.shared`` declaration (VMEM), never on the heap - the
+  seed silently handed back an HBM buffer, which type-checked and then
+  quietly lost the paper's SIII-B.1 semantics;
+* ``CONST`` returns a :class:`ConstArray` - a read-only view that every
+  lowering accepts as a kernel *input* but the launch path refuses to bind
+  to a written buffer (``cudaErrorInvalidSymbol`` analogue), enforced
+  centrally in :mod:`repro.core.api` so loop/vector/pallas/shard all honor
+  it;
+* ``TEXTURE`` raises, as in the paper.
 """
 from __future__ import annotations
 
@@ -33,6 +48,39 @@ class UnsupportedSpace(Exception):
     pass
 
 
+class ConstArray:
+    """A ``__constant__``-space buffer: read-only device array.
+
+    Kernels may read it like any global buffer (the launch path unwraps it
+    before packing); binding it to a buffer named in ``KernelDef.writes``
+    raises :class:`UnsupportedSpace` at launch, under every backend.
+    """
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        object.__setattr__(self, "value", jnp.asarray(value))
+
+    def __setattr__(self, name, _value):
+        raise UnsupportedSpace(f"ConstArray is read-only (tried to set "
+                               f"{name!r})")
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+    def __array__(self, dtype=None):
+        arr = np.asarray(jax.device_get(self.value))
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def __repr__(self):
+        return f"ConstArray(shape={self.shape}, dtype={self.dtype})"
+
+
 def cuda_malloc(shape, dtype=jnp.float32, space: Space = Space.GLOBAL):
     """cudaMalloc analogue: zero-filled device buffer in the given space."""
     if space is Space.TEXTURE:
@@ -40,7 +88,20 @@ def cuda_malloc(shape, dtype=jnp.float32, space: Space = Space.GLOBAL):
             "texture memory is unsupported (paper Table II: hybridsort/"
             "kmeans/leukocyte/mummergpu fall out for every framework)"
         )
+    if space is Space.SHARED:
+        raise UnsupportedSpace(
+            "__shared__ memory is block-scoped VMEM: declare it in "
+            "KernelDef.shared (or the dyn_shared launch slot for extern "
+            "arrays); it cannot be heap-allocated"
+        )
+    if space is Space.CONST:
+        return ConstArray(jnp.zeros(shape, dtype))
     return jnp.zeros(shape, dtype)
+
+
+def cuda_memcpy_to_symbol(host) -> ConstArray:
+    """``cudaMemcpyToSymbol``: populate a ``__constant__`` buffer."""
+    return ConstArray(jax.device_put(np.asarray(host)))
 
 
 def cuda_memcpy_h2d(host: np.ndarray):
@@ -48,4 +109,29 @@ def cuda_memcpy_h2d(host: np.ndarray):
 
 
 def cuda_memcpy_d2h(dev) -> np.ndarray:
+    if isinstance(dev, ConstArray):
+        dev = dev.value
     return np.asarray(jax.device_get(dev))
+
+
+def resolve_launch_args(kernel, args: dict) -> dict:
+    """Enforce CONST-space semantics on a launch's buffer bindings.
+
+    Rejects a :class:`ConstArray` bound to any buffer the kernel declares
+    in ``writes`` and unwraps the rest to plain arrays for packing.  Called
+    on the single launch path shared by all backends, so const-ness is
+    honored identically under loop/vector/pallas/shard.
+    """
+    out = {}
+    for name, buf in args.items():
+        if isinstance(buf, ConstArray):
+            if name in kernel.writes:
+                raise UnsupportedSpace(
+                    f"kernel {kernel.name}: buffer {name!r} is __constant__ "
+                    f"(ConstArray) but is in the kernel's write set "
+                    f"{tuple(kernel.writes)}; constant memory is read-only"
+                )
+            out[name] = buf.value
+        else:
+            out[name] = buf
+    return out

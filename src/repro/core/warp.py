@@ -96,6 +96,29 @@ def ballot(pred):
     return _flat(jnp.broadcast_to(red, w.shape))
 
 
+def syncthreads_count(pred, block_dim: int):
+    """``__syncthreads_count``: block-wide count of true predicates.
+
+    CUDA evaluates the predicate across the *whole block* at a barrier and
+    hands every thread the count.  Here the count is a reduction over the
+    thread-chunk axis, so the chunk must span the block: always true under
+    the vector/pallas lowerings (chunk == block), and under the loop
+    lowering exactly when ``block_dim == 32`` in warp mode - the classic
+    ``blockDim == warpSize`` idiom Rodinia BFS-style kernels use.  Larger
+    blocks under the loop lowering raise :class:`UnsupportedKernel` (a
+    Table-II 'unsupport' cell, not silent wrong answers).
+    """
+    n = pred.shape[0]
+    if n != block_dim:
+        raise UnsupportedKernel(
+            f"__syncthreads_count needs the thread chunk ({n}) to span the "
+            f"block ({block_dim}); under the loop lowering use 32-thread "
+            f"blocks (warp mode) or the vector/pallas lowering"
+        )
+    count = jnp.sum(pred.astype(jnp.int32), axis=0, keepdims=True)
+    return jnp.broadcast_to(count, (n,) + count.shape[1:])
+
+
 _REDUCERS = {
     "add": jnp.sum,
     "max": jnp.max,

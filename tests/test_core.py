@@ -3,22 +3,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Policy, Stream, UnsupportedKernel, launch
+from repro.core import Policy, Stream, UnsupportedKernel
 from repro.core import grain as grain_mod
 from repro.core import packing
-from repro.core.cuda_suite import build_suite
+from repro.core.cuda_suite import build_suite, run_entry
 
 RNG = np.random.default_rng(0)
 SUITE = build_suite(scale=1)
 
 
 def _run(entry, backend, grain=1, **kw):
-    args = entry.make_args(np.random.default_rng(42))
-    out = launch(entry.kernel, grid=entry.grid, block=entry.block,
-                 args={k: jnp.asarray(v) for k, v in args.items()},
-                 backend=backend, grain=grain,
-                 dyn_shared=entry.dyn_shared, **kw)
-    return out, entry.reference(args)
+    return run_entry(entry, backend, rng=np.random.default_rng(42),
+                     grain=grain, **kw)
 
 
 @pytest.mark.parametrize("entry", SUITE, ids=lambda e: e.name)
@@ -27,7 +23,7 @@ def test_suite_allclose(entry, backend):
     out, want = _run(entry, backend)
     for k, v in want.items():
         np.testing.assert_allclose(np.asarray(out[k]), v,
-                                   rtol=2e-5, atol=2e-5)
+                                   rtol=entry.tol, atol=entry.tol)
 
 
 def test_loop_equals_vector_bitwise_structure():
@@ -35,9 +31,10 @@ def test_loop_equals_vector_bitwise_structure():
     for entry in SUITE:
         o1, _ = _run(entry, "loop")
         o2, _ = _run(entry, "vector")
+        tol = max(entry.tol, 1e-5)
         for k in o1:
             np.testing.assert_allclose(np.asarray(o1[k]), np.asarray(o2[k]),
-                                       rtol=1e-5, atol=1e-5)
+                                       rtol=tol, atol=tol)
 
 
 # --- Table II coverage parity ------------------------------------------------

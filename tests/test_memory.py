@@ -1,0 +1,94 @@
+"""CUDA memory-space semantics: spaces are honored, not just recorded.
+
+Regression for the seed behavior where ``cuda_malloc`` silently returned a
+plain HBM buffer for SHARED/CONST: shared-space mallocs now raise (shared
+memory is declared on the kernel), and const-space buffers come back as
+read-only :class:`ConstArray` views that every backend's launch path
+refuses to bind to a written buffer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConstArray,
+    Space,
+    UnsupportedSpace,
+    cuda_malloc,
+    cuda_memcpy_d2h,
+    cuda_memcpy_to_symbol,
+    launch,
+)
+from repro.core.cuda_suite import make_vecadd
+
+
+def _vecadd_args(n=128):
+    return {"a": jnp.arange(n, dtype=jnp.float32),
+            "b": jnp.ones(n, jnp.float32),
+            "c": jnp.zeros(n, jnp.float32)}
+
+
+def test_global_malloc_plain_buffer():
+    buf = cuda_malloc((8,), jnp.float32)
+    assert buf.shape == (8,) and not isinstance(buf, ConstArray)
+    np.testing.assert_array_equal(np.asarray(buf), np.zeros(8))
+
+
+def test_shared_malloc_rejected():
+    """Regression: the seed handed back an HBM buffer for __shared__."""
+    with pytest.raises(UnsupportedSpace, match="KernelDef.shared"):
+        cuda_malloc((32,), jnp.float32, space=Space.SHARED)
+
+
+def test_texture_malloc_rejected():
+    with pytest.raises(UnsupportedSpace, match="texture"):
+        cuda_malloc((32,), jnp.float32, space=Space.TEXTURE)
+
+
+def test_const_malloc_returns_readonly_wrapper():
+    buf = cuda_malloc((4, 4), jnp.int32, space=Space.CONST)
+    assert isinstance(buf, ConstArray)
+    assert buf.shape == (4, 4) and buf.dtype == jnp.int32
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        buf.value = jnp.ones((4, 4), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(buf), np.zeros((4, 4)))
+
+
+def test_memcpy_to_symbol_and_d2h():
+    host = np.arange(6, dtype=np.float32).reshape(2, 3)
+    sym = cuda_memcpy_to_symbol(host)
+    assert isinstance(sym, ConstArray)
+    np.testing.assert_array_equal(cuda_memcpy_d2h(sym), host)
+
+
+@pytest.mark.parametrize("backend", ["loop", "vector", "pallas", "shard"])
+def test_const_read_ok_every_backend(backend):
+    """ConstArray inputs launch fine when only read."""
+    n = 128
+    k = make_vecadd(n)
+    args = _vecadd_args(n)
+    args["a"] = cuda_memcpy_to_symbol(np.asarray(args["a"]))
+    out = launch(k, grid=1, block=n, args=args, backend=backend)
+    np.testing.assert_allclose(np.asarray(out["c"]),
+                               np.arange(n) + 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["loop", "vector", "pallas", "shard"])
+def test_const_write_rejected_every_backend(backend):
+    """Regression: binding __constant__ memory to a written buffer must
+    raise under every lowering (it used to silently write)."""
+    n = 128
+    k = make_vecadd(n)
+    args = _vecadd_args(n)
+    args["c"] = cuda_malloc((n,), jnp.float32, space=Space.CONST)
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        launch(k, grid=1, block=n, args=args, backend=backend)
+
+
+def test_const_write_rejected_via_chevron():
+    n = 64
+    k = make_vecadd(n)
+    args = _vecadd_args(n)
+    args["c"] = cuda_malloc((n,), jnp.float32, space=Space.CONST)
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        k[1, n](args)

@@ -52,6 +52,103 @@ def test_histogram_conserves_mass(nbins, grain, seed):
 
 
 # --- warp ops ---------------------------------------------------------------
+def _warps_ref(v):
+    return np.asarray(v).reshape(-1, 32)
+
+
+def _shfl_shift_ref(v, delta, direction):
+    """NumPy oracle for shfl_up/down incl. CUDA's keep-own-value semantics
+    when the source lane falls outside the warp."""
+    w = _warps_ref(v)
+    lane = np.arange(32)
+    src = lane + direction * delta
+    ok = (src >= 0) & (src < 32)
+    gathered = w[:, np.clip(src, 0, 31)]
+    return np.where(ok[None, :], gathered, w).reshape(-1)
+
+
+@SET
+@given(nwarps=st.integers(1, 4), delta=st.integers(0, 40),
+       seed=st.integers(0, 50))
+def test_shfl_up_matches_numpy(nwarps, delta, seed):
+    v = np.random.default_rng(seed).standard_normal(
+        nwarps * 32).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(warp.shfl_up(jnp.asarray(v),
+                                                          delta)),
+                                  _shfl_shift_ref(v, delta, -1))
+
+
+@SET
+@given(nwarps=st.integers(1, 4), delta=st.integers(0, 40),
+       seed=st.integers(0, 50))
+def test_shfl_down_matches_numpy(nwarps, delta, seed):
+    v = np.random.default_rng(seed).standard_normal(
+        nwarps * 32).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(warp.shfl_down(jnp.asarray(v),
+                                                            delta)),
+                                  _shfl_shift_ref(v, delta, +1))
+
+
+@SET
+@given(nwarps=st.integers(1, 3), src=st.integers(-64, 64),
+       seed=st.integers(0, 50))
+def test_shfl_scalar_src_matches_numpy(nwarps, src, seed):
+    """Scalar-source shfl broadcasts lane ``src % 32`` warp-wide."""
+    v = np.random.default_rng(seed).standard_normal(
+        nwarps * 32).astype(np.float32)
+    out = np.asarray(warp.shfl(jnp.asarray(v), src % 32))
+    want = np.repeat(_warps_ref(v)[:, src % 32], 32)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
+@given(nwarps=st.integers(1, 3), seed=st.integers(0, 50))
+def test_shfl_per_thread_src_matches_numpy(nwarps, seed):
+    r = np.random.default_rng(seed)
+    v = r.standard_normal(nwarps * 32).astype(np.float32)
+    src = r.integers(0, 64, nwarps * 32)          # lane ids wrap mod 32
+    out = np.asarray(warp.shfl(jnp.asarray(v), jnp.asarray(src)))
+    w, s = _warps_ref(v), _warps_ref(src) % 32
+    want = np.take_along_axis(w, s, axis=1).reshape(-1)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
+@given(nwarps=st.integers(1, 4), thresh=st.floats(-2.0, 2.0),
+       seed=st.integers(0, 50))
+def test_vote_matches_numpy(nwarps, thresh, seed):
+    v = np.random.default_rng(seed).standard_normal(nwarps * 32)
+    pred = jnp.asarray(v < thresh)
+    w = _warps_ref(v) < thresh
+    np.testing.assert_array_equal(
+        np.asarray(warp.vote_all(pred)), np.repeat(w.all(1), 32))
+    np.testing.assert_array_equal(
+        np.asarray(warp.vote_any(pred)), np.repeat(w.any(1), 32))
+
+
+@SET
+@given(nwarps=st.integers(1, 4), thresh=st.floats(-2.0, 2.0),
+       seed=st.integers(0, 50))
+def test_ballot_matches_numpy(nwarps, thresh, seed):
+    v = np.random.default_rng(seed).standard_normal(nwarps * 32)
+    pred = _warps_ref(v) < thresh
+    out = np.asarray(warp.ballot(jnp.asarray(v < thresh)))
+    want = np.repeat((pred.astype(np.uint64)
+                      << np.arange(32, dtype=np.uint64)).sum(1)
+                     .astype(np.uint32), 32)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
+@given(block=st.sampled_from([32, 64, 128]), thresh=st.floats(-2.0, 2.0),
+       seed=st.integers(0, 50))
+def test_syncthreads_count_matches_numpy(block, thresh, seed):
+    v = np.random.default_rng(seed).standard_normal(block)
+    out = np.asarray(warp.syncthreads_count(jnp.asarray(v < thresh), block))
+    np.testing.assert_array_equal(out, np.full(block, int((v < thresh).sum()),
+                                               np.int32))
+
+
 @SET
 @given(mask=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 50))
 def test_shfl_xor_involution(mask, seed):

@@ -23,18 +23,14 @@ from repro.core import (
     get_backend,
     launch,
 )
-from repro.core.cuda_suite import build_suite, make_vecadd
+from repro.core.cuda_suite import build_suite, make_vecadd, run_entry
 from repro.core.kernel import KernelDef
 
 SUITE = build_suite(scale=1)
 
 
 def _run(entry, backend, **kw):
-    args = entry.make_args(np.random.default_rng(7))
-    out = launch(entry.kernel, grid=entry.grid, block=entry.block,
-                 args={k: jnp.asarray(v) for k, v in args.items()},
-                 backend=backend, dyn_shared=entry.dyn_shared, **kw)
-    return out, entry.reference(args)
+    return run_entry(entry, backend, rng=np.random.default_rng(7), **kw)
 
 
 def make_blockmax(n: int, block: int, combines) -> KernelDef:
@@ -70,7 +66,9 @@ def make_blocksum(n_blocks: int, block: int, combines) -> KernelDef:
 def test_shard_equals_loop_bitwise(entry):
     o1, _ = _run(entry, "loop")
     o2, _ = _run(entry, "shard")
-    for k in entry.kernel.writes:
+    for k in o1:
+        if k in entry.nondeterministic_shard:
+            continue
         assert np.asarray(o1[k]).tobytes() == np.asarray(o2[k]).tobytes(), (
             f"{entry.name}: buffer {k} differs between loop and shard "
             f"at device_count={jax.device_count()}")
@@ -98,7 +96,9 @@ def test_shard_vector_equals_vector():
     for entry in SUITE:
         o1, _ = _run(entry, "vector")
         o2, _ = _run(entry, "shard_vector")
-        for k in entry.kernel.writes:
+        for k in o1:
+            if k in entry.nondeterministic_shard:
+                continue
             np.testing.assert_allclose(
                 np.asarray(o1[k]), np.asarray(o2[k]), rtol=1e-5, atol=1e-5,
                 err_msg=f"{entry.name}: vector vs shard_vector")
@@ -285,6 +285,44 @@ def test_on_rejects_unknown_options():
     k = make_vecadd(64)
     with pytest.raises(TypeError, match="unexpected"):
         k[1, 64].on(device=4)        # typo'd option name
+
+
+# --- LaunchConfig error paths on the Rodinia-mini kernels ---------------------
+def test_new_kernel_chevron_dim3_rank_mismatch():
+    """A 4-extent dim3 is not a CUDA grid, on wavefront kernels too."""
+    from repro.core.cuda_suite import make_bfs_frontier, make_pathfinder
+    with pytest.raises(ValueError, match="dim3"):
+        make_bfs_frontier(64, 4)[(2, 1, 1, 1), 32]
+    with pytest.raises(ValueError, match="dim3"):
+        make_pathfinder(256, 64)[4, (64, 1, 1, 1)]
+
+
+def test_new_kernel_zero_size_grid():
+    from repro.core.cuda_suite import make_needle_nw, make_srad_update
+    with pytest.raises(ValueError, match=">= 1"):
+        make_needle_nw(32)[0, 16]
+    with pytest.raises(ValueError, match=">= 1"):
+        make_srad_update(32, 64)[(8, 0), (8, 8)]
+
+
+def test_shard_launch_combines_missing_written_arg():
+    """A kernel that declares combines for SOME writes but forgets one is
+    rejected by the shard backend (the implicit sum default is a trap)."""
+    import dataclasses as _dc
+
+    from repro.core.cuda_suite import entry_bfs_frontier
+    entry = entry_bfs_frontier()
+    partial = _dc.replace(entry.kernel,
+                          combines={"visited": "max", "nxt": "max",
+                                    "active": "sum"})   # 'dist' forgotten
+    args = {k: jnp.asarray(v)
+            for k, v in entry.make_args(np.random.default_rng(0)).items()}
+    with pytest.raises(UnsupportedKernel, match="missing written"):
+        launch(partial, grid=entry.grid, block=entry.block, args=args,
+               backend="shard")
+    # the loop backend doesn't combine, so it still accepts the kernel
+    launch(partial, grid=entry.grid, block=entry.block, args=args,
+           backend="loop")
 
 
 # --- real multi-device execution, even under a 1-device parent ---------------

@@ -1,6 +1,7 @@
 """Warp-level intrinsics + atomics adaptation."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import atomics, warp
 
@@ -67,3 +68,66 @@ def test_atomic_cas_compare_fails():
     out = atomics.atomic_cas_first(arr, jnp.asarray([0]), jnp.asarray([0]),
                                    jnp.asarray([9]))
     np.testing.assert_array_equal(np.asarray(out), [1, 1, 1, 1])
+
+
+def test_atomic_cas_returns_old_values():
+    """atomicCAS observers: the winner sees the pre-swap value, duplicate
+    claimants see the swapped value (serialized in thread order)."""
+    arr = jnp.zeros(4, jnp.int32)
+    idx = jnp.asarray([2, 2, 3, 1])
+    cmp = jnp.zeros(4, jnp.int32)
+    val = jnp.ones(4, jnp.int32)
+    new, old = atomics.atomic_cas(arr, idx, cmp, val)
+    np.testing.assert_array_equal(np.asarray(new), [0, 1, 1, 1])
+    # thread 0 won slot 2 (old==cmp); thread 1 lost (observed the swap)
+    np.testing.assert_array_equal(np.asarray(old), [0, 1, 0, 0])
+
+
+def test_atomic_cas_old_when_compare_fails():
+    arr = jnp.asarray([5, 0], jnp.int32)
+    new, old = atomics.atomic_cas(arr, jnp.asarray([0]), jnp.asarray([0]),
+                                  jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(new), [5, 0])   # no swap
+    assert int(np.asarray(old)[0]) == 5
+
+
+def test_atomic_exch_serialized():
+    arr = jnp.asarray([10, 20, 30], jnp.int32)
+    idx = jnp.asarray([1, 1, 2])
+    val = jnp.asarray([7, 8, 9])
+    new, old = atomics.atomic_exch(arr, idx, val)
+    # serialized in thread order: the last duplicate's value survives
+    np.testing.assert_array_equal(np.asarray(new), [10, 8, 9])
+    # the first claimant of slot 1 saw 20; the duplicate saw the exchanged 7
+    np.testing.assert_array_equal(np.asarray(old), [20, 7, 30])
+
+
+def test_atomic_exch_oob_index_stores_nothing():
+    arr = jnp.asarray([1, 2], jnp.int32)
+    new, old = atomics.atomic_exch(arr, jnp.asarray([2]), jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(new), [1, 2])
+
+
+def test_atomic_cas_failed_first_then_matching_duplicate():
+    """Serialization regression: a duplicate whose compare matches after a
+    FAILED first attempt must actually store (old==cmp implies a write)."""
+    arr = jnp.asarray([5], jnp.int32)
+    idx = jnp.asarray([0, 0])
+    cmp = jnp.asarray([9, 5])
+    val = jnp.asarray([7, 8])
+    new, old = atomics.atomic_cas(arr, idx, cmp, val)
+    np.testing.assert_array_equal(np.asarray(old), [5, 5])
+    np.testing.assert_array_equal(np.asarray(new), [8])   # thread 1 won
+
+
+def test_syncthreads_count_matches_numpy():
+    pred = jnp.asarray(np.arange(64) % 3 == 0)
+    out = np.asarray(warp.syncthreads_count(pred, 64))
+    want = int((np.arange(64) % 3 == 0).sum())
+    np.testing.assert_array_equal(out, np.full(64, want, np.int32))
+
+
+def test_syncthreads_count_needs_whole_block():
+    from repro.core import UnsupportedKernel
+    with pytest.raises(UnsupportedKernel, match="span the block"):
+        warp.syncthreads_count(jnp.zeros(32, bool), 64)
