@@ -53,6 +53,17 @@ METRICS = {
         ("shard_scaling.json", "speedup", 0.40, 0.6),
     "shard_scaling:speedup_best":
         ("shard_scaling.json", "speedup_best", 0.40, 1.1),
+    # memory runtime (ISSUE 5): the device-resident chain driver must keep
+    # cutting host syncs by ~check_every (exact counter arithmetic, tight
+    # floor) and the captured-chain fused replay must clearly beat the
+    # host-hop driver; the eager device mode's win is smaller (no per-
+    # iteration h2d), so its floor only guards regressions below parity.
+    "membench:sync.reduction":
+        ("membench.json", "sync.reduction", 0.60, 2.0),
+    "membench:device_speedup":
+        ("membench.json", "device_speedup", 0.50, 0.9),
+    "membench:graph_speedup":
+        ("membench.json", "graph_speedup", 0.25, 1.5),
 }
 
 

@@ -26,6 +26,7 @@ from repro.core.graphs import Graph, GraphError, GraphExec
 from repro.core.kernel import (
     WARP_SIZE,
     BlockState,
+    ChainStats,
     ChainStep,
     CompiledKernel,
     Ctx,
@@ -35,9 +36,13 @@ from repro.core.kernel import (
 )
 from repro.core.memory import (
     ConstArray,
+    CudaError,
+    DeviceBuffer,
     Space,
     UnsupportedSpace,
+    cuda_free,
     cuda_malloc,
+    cuda_memcpy_async,
     cuda_memcpy_d2h,
     cuda_memcpy_h2d,
     cuda_memcpy_to_symbol,
@@ -52,14 +57,15 @@ def __getattr__(name):
 
 
 __all__ = [
-    "BACKENDS", "Backend", "BlockState", "CacheStats", "ChainStep",
-    "CompiledKernel", "ConstArray", "Ctx", "Dim3", "Event", "Graph",
-    "GraphError", "GraphExec", "KernelDef", "LaunchChain", "LaunchConfig",
-    "Policy", "Runtime", "Space", "Stream", "UnknownBackend",
-    "UnsupportedKernel", "UnsupportedSpace", "WARP_SIZE", "backend_names",
-    "cache_clear", "cache_resize", "cache_size", "cache_stats", "compiled",
-    "coverage", "cuda_malloc", "cuda_memcpy_d2h", "cuda_memcpy_h2d",
-    "cuda_memcpy_to_symbol", "disable_disk_cache", "enable_disk_cache",
-    "get_backend", "launch", "register_backend", "supported",
-    "unregister_backend",
+    "BACKENDS", "Backend", "BlockState", "CacheStats", "ChainStats",
+    "ChainStep", "CompiledKernel", "ConstArray", "Ctx", "CudaError",
+    "DeviceBuffer", "Dim3", "Event", "Graph", "GraphError", "GraphExec",
+    "KernelDef", "LaunchChain", "LaunchConfig", "Policy", "Runtime",
+    "Space", "Stream", "UnknownBackend", "UnsupportedKernel",
+    "UnsupportedSpace", "WARP_SIZE", "backend_names", "cache_clear",
+    "cache_resize", "cache_size", "cache_stats", "compiled", "coverage",
+    "cuda_free", "cuda_malloc", "cuda_memcpy_async", "cuda_memcpy_d2h",
+    "cuda_memcpy_h2d", "cuda_memcpy_to_symbol", "disable_disk_cache",
+    "enable_disk_cache", "get_backend", "launch", "register_backend",
+    "supported", "unregister_backend",
 ]

@@ -175,7 +175,7 @@ def device_opts(backend_entry, devices, shard_axis) -> dict:
 
 def _build(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
            grain: int, dyn_shared, treedef, interpret: bool,
-           devices, shard_axis):
+           devices, shard_axis, donate_idx: tuple[int, ...] = ()):
     entry = get_backend(backend)
     extra = device_opts(entry, devices, shard_axis)
 
@@ -185,7 +185,11 @@ def _build(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
                          grain=grain, dyn_shared=dyn_shared,
                          interpret=interpret, **extra)
 
-    return jax.jit(fn)
+    # leaves of declared-donated, handle-bound buffers hand their storage
+    # to XLA: the input array is consumed (deleted) and may alias the
+    # output buffer - safe because the caller's only path to it is the
+    # DeviceBuffer handle, which rebind_outputs points at the output
+    return jax.jit(fn, donate_argnums=donate_idx)
 
 
 def _resolve_grain(kernel: KernelDef, grain, pool, n_blocks: int) -> int:
@@ -203,22 +207,26 @@ def _resolve_grain(kernel: KernelDef, grain, pool, n_blocks: int) -> int:
 
 def _compile(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
              grain: int, dyn_shared, interpret: bool, treedef, leaves,
-             shapes, key: tuple, devices, shard_axis) -> CompiledKernel:
+             shapes, key: tuple, devices, shard_axis,
+             donate_idx: tuple[int, ...] = ()) -> CompiledKernel:
     """Cache-miss path: disk artifact if available, else trace+lower."""
     akey = None
     if _DISK is not None:
         akey = compile_cache.artifact_key(
             kernel.fingerprint(), backend, grid, block, grain, dyn_shared,
             interpret, treedef, shapes, devices=devices,
-            shard_axis=shard_axis)
+            shard_axis=shard_axis, donate_idx=donate_idx)
         loaded = _DISK.load(akey)
         if loaded is not None:
+            # deserialized artifacts dispatch without donation (jax.export
+            # does not carry aliasing); handle re-binding still applies, so
+            # semantics match - only the storage reuse is lost
             _STATS.disk_hits += 1
             return CompiledKernel(kernel=kernel, backend=backend, grid=grid,
                                   block=block, key=key, fn=jax.jit(loaded),
                                   source="disk")
     fn = _build(kernel, backend, grid, block, grain, dyn_shared, treedef,
-                interpret, devices, shard_axis)
+                interpret, devices, shard_axis, donate_idx)
     # surface UnsupportedKernel eagerly (coverage probes rely on this)
     jax.eval_shape(fn, *leaves)
     if _DISK is not None and _DISK.store(akey, fn, leaves):
@@ -239,13 +247,17 @@ def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
     opts = device_opts(get_backend(backend), devices, shard_axis)
     devices = opts.get("devices")
     shard_axis = opts.get("shard_axis", "blocks")
-    # CONST-space enforcement: reject ConstArray bindings on written
-    # buffers, unwrap the rest (honored here so every backend obeys)
+    # handle liveness + CONST-space enforcement: reject freed DeviceBuffer
+    # and written-ConstArray bindings, unwrap the rest (honored here so
+    # every backend obeys); donation applies only to declared buffers the
+    # caller bound by live handle (memory.donated_names)
+    donated = set(memory_mod.donated_names(kernel, args))
     args = memory_mod.resolve_launch_args(kernel, args)
     leaves, treedef = packing.pack(args)  # host prologue (SIII-C.2)
+    donate_idx = _donate_leaf_indices(args, donated)
     shapes = tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves)
     key = (backend, grid, block, grain, dyn_shared, interpret, treedef,
-           shapes, devices, shard_axis)
+           shapes, devices, shard_axis, donate_idx)
     per_kernel = _kernel_cache(kernel)
     entry = per_kernel.get(key)
     if entry is not None:
@@ -255,10 +267,23 @@ def _entry_for(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
     _STATS.misses += 1
     entry = _compile(kernel, backend, grid, block, grain, dyn_shared,
                      interpret, treedef, leaves, shapes, key, devices,
-                     shard_axis)
+                     shard_axis, donate_idx)
     per_kernel[key] = entry
     _lru_insert(kernel, key)
     return entry, leaves
+
+
+def _donate_leaf_indices(resolved_args: dict, donated: set) -> tuple:
+    """Leaf positions of donated buffers in the packed ``void**`` tuple."""
+    if not donated:
+        return ()
+    idx, pos = [], 0
+    for name in sorted(resolved_args):   # tree_flatten's dict-key order
+        n_leaves = len(jax.tree_util.tree_leaves(resolved_args[name]))
+        if name in donated:
+            idx.extend(range(pos, pos + n_leaves))
+        pos += n_leaves
+    return tuple(idx)
 
 
 def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
@@ -267,7 +292,11 @@ def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
     entry, leaves = _entry_for(kernel, grid, block, args, backend, grain,
                                dyn_shared, interpret, pool, devices,
                                shard_axis)
-    return entry(*leaves)
+    out = entry(*leaves)
+    # donated handle-bound buffers come back as the SAME handle, re-bound
+    # to the kernel's output (the CUDA in-place view); everything else is
+    # a plain functional result
+    return memory_mod.rebind_outputs(kernel, args, out)
 
 
 def compiled(kernel: KernelDef, *, grid, block, args: dict,

@@ -41,7 +41,8 @@ CACHE_FORMAT_VERSION = 1
 
 def artifact_key(fingerprint: str, backend: str, grid, block, grain,
                  dyn_shared, interpret, treedef, shapes, *,
-                 devices=None, shard_axis: str = "blocks") -> str:
+                 devices=None, shard_axis: str = "blocks",
+                 donate_idx: tuple[int, ...] = ()) -> str:
     """Stable cross-process hash of one launch specialization.
 
     Includes the lowering platform: ``jax.export`` artifacts are
@@ -56,7 +57,8 @@ def artifact_key(fingerprint: str, backend: str, grid, block, grain,
     payload = repr((CACHE_FORMAT_VERSION, jax.__version__,
                     jax.default_backend(), jax.device_count(), fingerprint,
                     backend, tuple(grid), tuple(block), grain, dyn_shared,
-                    interpret, devices, shard_axis, str(treedef), shapes))
+                    interpret, devices, shard_axis, tuple(donate_idx),
+                    str(treedef), shapes))
     return hashlib.sha256(payload.encode()).hexdigest()
 
 

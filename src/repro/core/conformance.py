@@ -13,8 +13,14 @@ makes that a first-class, machine-checkable property of the repo:
   for the dtype-polymorphic kernels, and forced device counts for the
   multi-device backends;
 * :func:`run_matrix` sweeps backend x grid/block geometry x dtype x grain
-  x devices, checking every cell against the oracle (tolerance banded by
-  dtype and per-case ``tol``) **and** against an anchor backend's bits:
+  x devices x *replay mode* - LaunchChain workloads run a
+  ``device_resident`` leg (on-device update hooks, stop flags polled
+  every k iterations) and a ``graph`` leg (iterations captured once and
+  replayed as fused jitted dispatches) that must be bit-identical to the
+  same backend's per-iteration host-hop replay on every buffer except
+  declared ``iteration_state`` scratch - checking every cell against the
+  oracle (tolerance banded by dtype and per-case ``tol``) **and**
+  against an anchor backend's bits:
   ``shard`` must be bit-identical to ``loop`` (and ``shard_vector`` to
   ``vector``) wherever the kernel's ``combines`` declaration is exact,
   because the shard backend replays the same inner lowering per block
@@ -64,6 +70,11 @@ VARIANT_BACKENDS = ("loop", "vector", "shard")
 #: backends that sweep the extra-dtype axis
 DTYPE_BACKENDS = ("loop", "vector")
 
+#: backends that sweep the graph-captured chain-replay mode (the fused
+#: replay jits every captured iteration; the single-device lowerings keep
+#: that cell affordable, and the shard legs are covered by "device" mode)
+GRAPH_MODE_BACKENDS = ("loop", "vector")
+
 
 @dataclasses.dataclass(frozen=True)
 class ConformanceCase:
@@ -87,7 +98,13 @@ class ConformanceCase:
 
 @dataclasses.dataclass
 class Cell:
-    """One matrix cell: a (kernel, backend, geometry, dtype, ...) run."""
+    """One matrix cell: a (kernel, backend, geometry, dtype, ...) run.
+
+    ``mode`` is the chain-replay axis: ``"host"`` (per-iteration host-hop
+    baseline, the only mode for single-launch kernels),
+    ``"device_resident"`` (on-device updates, k-batched stop polls), or
+    ``"graph"`` (graph-captured fused replay).
+    """
 
     kernel: str
     backend: str
@@ -97,6 +114,7 @@ class Cell:
     grain: int
     devices: int | None
     status: str                       # pass | fail | unsupport | skip
+    mode: str = "host"
     max_abs_err: float | None = None
     anchor: str | None = None
     bit_required: bool = False
@@ -105,8 +123,10 @@ class Cell:
 
     def label(self) -> str:
         dev = "" if self.devices is None else f"@dev{self.devices}"
+        mode = "" if self.mode == "host" else f" mode={self.mode}"
         return (f"{self.kernel}/{self.backend}{dev} grid={self.grid} "
-                f"block={self.block} {self.dtype} grain={self.grain}")
+                f"block={self.block} {self.dtype} grain={self.grain}"
+                f"{mode}")
 
 
 @dataclasses.dataclass
@@ -353,14 +373,20 @@ def _bits(out, exclude: tuple[str, ...]) -> dict[str, bytes]:
             if k not in exclude}
 
 
+#: Cell.mode -> run_entry chain_mode
+_CHAIN_MODE = {"host": "host", "device_resident": "device",
+               "graph": "graph"}
+
+
 def run_cell(entry: SuiteEntry, case: ConformanceCase, backend: str,
-             tag: str, grid, block, grain: int,
-             devices: int | None) -> tuple[Cell, dict | None]:
+             tag: str, grid, block, grain: int, devices: int | None,
+             mode: str = "host") -> tuple[Cell, dict | None]:
     """Run one matrix cell; returns (cell, out-buffers-or-None)."""
     from repro.core.dim3 import Dim3
     cell = Cell(kernel=case.name, backend=backend,
                 grid=tuple(Dim3.of(grid)), block=tuple(Dim3.of(block)),
-                dtype=tag, grain=grain, devices=devices, status="pass")
+                dtype=tag, grain=grain, devices=devices, status="pass",
+                mode=mode)
     geo_kw = {}
     if entry.chain is None:
         geo_kw = {"grid": grid, "block": block}
@@ -369,7 +395,8 @@ def run_cell(entry: SuiteEntry, case: ConformanceCase, backend: str,
                else contextlib.nullcontext())
         with ctx:
             out, want = run_entry(entry, backend, grain=grain,
-                                  devices=devices, **geo_kw)
+                                  devices=devices,
+                                  chain_mode=_CHAIN_MODE[mode], **geo_kw)
         tol = _tol_for(entry, case, tag)
         cell.max_abs_err, bad = _oracle_check(out, want, tol)
         if bad:
@@ -407,21 +434,31 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
         base_tag = case.dtypes[0]
         base = entries[base_tag]
 
-        # axis points: (tag, grid, block, grain); base point first
-        points = [(base_tag, base.grid, base.block, 1)]
+        # axis points: (tag, grid, block, grain, mode); base point first
+        points = [(base_tag, base.grid, base.block, 1, "host")]
         if variants:
             for g in case.grains:
                 if g != 1:
-                    points.append((base_tag, base.grid, base.block, g))
+                    points.append((base_tag, base.grid, base.block, g,
+                                   "host"))
             if (base.chain is None and base.dim3_free
                     and isinstance(base.grid, int)):
                 for gv in grid_variants(base.grid):
-                    points.append((base_tag, gv, base.block, 1))
+                    points.append((base_tag, gv, base.block, 1, "host"))
             for tag in case.dtypes[1:]:
                 e = entries[tag]
-                points.append((tag, e.grid, e.block, 1))
+                points.append((tag, e.grid, e.block, 1, "host"))
+            if base.chain is not None:
+                # the device-resident leg: every chain kernel replays with
+                # on-device inter-launch state, owing bit-identity to the
+                # same backend's host-hop replay (modulo iteration_state)
+                points.append((base_tag, base.grid, base.block, 1,
+                               "device_resident"))
+                points.append((base_tag, base.grid, base.block, 1,
+                               "graph"))
 
         anchors: dict[tuple, dict[str, bytes]] = {}
+        host_bits: dict[tuple, dict[str, bytes]] = {}
 
         def anchor_key(anchor_backend, tag, grid, block, grain):
             return (anchor_backend, tag, repr(grid), repr(block), grain)
@@ -442,11 +479,14 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
         for backend in backends:
             multi = get_backend(backend).supports("multi_device")
             devs = device_counts if multi else (None,)
-            for pi, (tag, grid, block, grain) in enumerate(points):
+            for pi, (tag, grid, block, grain, mode) in enumerate(points):
                 if pi > 0:       # variant points sweep a backend subset
                     if backend not in VARIANT_BACKENDS + ("shard_vector",):
                         continue
                     if tag != base_tag and backend not in DTYPE_BACKENDS:
+                        continue
+                    if (mode == "graph"
+                            and backend not in GRAPH_MODE_BACKENDS):
                         continue
                 for d in devs:
                     if d is not None and d > avail:
@@ -456,11 +496,39 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                             grid=tuple(Dim3.of(grid)),
                             block=tuple(Dim3.of(block)), dtype=tag,
                             grain=grain, devices=d, status="skip",
+                            mode=mode,
                             detail=f"only {avail} device(s) available"))
                         continue
                     entry = entries[tag]
                     cell, out = run_cell(entry, case, backend, tag, grid,
-                                         block, grain, d)
+                                         block, grain, d, mode)
+                    if mode == "host" and pi == 0 and out is not None:
+                        host_bits[(backend, d)] = _bits(out, ())
+                    if mode != "host":
+                        # the device-resident/graph legs anchor on the SAME
+                        # backend's host-hop bits; stop-poll-cadence scratch
+                        # (iteration_state) is excluded, oracle outputs never
+                        base_bits = host_bits.get((backend, d))
+                        if out is not None and base_bits is not None:
+                            skip_bufs = (tuple(entry.nondeterministic_shard)
+                                         + tuple(entry.iteration_state))
+                            got = {k: v for k, v in _bits(out, ()).items()
+                                   if k not in skip_bufs}
+                            ref = {k: v for k, v in base_bits.items()
+                                   if k not in skip_bufs}
+                            cell.anchor = f"{backend}/host"
+                            cell.bit_required = True
+                            cell.bit_identical = got == ref
+                            if not cell.bit_identical:
+                                diff = [k for k in got if got[k] != ref[k]]
+                                cell.status = "fail"
+                                cell.detail = (
+                                    (cell.detail + " " if cell.detail
+                                     else "")
+                                    + f"{mode} replay bits differ from "
+                                      f"host-hop on {diff}")
+                        cells.append(cell)
+                        continue
                     if out is not None and backend in set(
                             BIT_ANCHOR.values()):
                         # this cell IS someone's anchor: seed the cache so

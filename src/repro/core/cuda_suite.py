@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.core import memory
 from repro.core.api import launch
-from repro.core.kernel import ChainStep, KernelDef, LaunchChain
+from repro.core.kernel import ChainStats, ChainStep, KernelDef, LaunchChain
 
 OOB = 1 << 30  # out-of-bounds sentinel for mode="drop" stores
 
@@ -443,6 +443,7 @@ def make_bfs_frontier(n: int, deg: int) -> KernelDef:
         uses_warp=True,
         combines={"visited": "max", "nxt": "max", "dist": "max",
                   "active": "sum"},
+        donates=("visited", "nxt", "dist", "active"),
         est_block_work=deg * 64.0,
     )
 
@@ -481,6 +482,7 @@ def make_pathfinder(cols: int, block: int, dtype=jnp.int32) -> KernelDef:
         reads=("wall", "src", "dst", "row"),
         shared={"s": ((block + 2,), dtype)},
         combines={"dst": "sum"},       # dst re-zeroed per launch: exact
+        donates=("dst",),              # ping-pong target: alias, don't copy
         est_block_work=block * 6.0,
     )
 
@@ -512,6 +514,7 @@ def make_needle_nw(n: int, penalty: int = 2) -> KernelDef:
         "needle_nw", (stage,), writes=("score",),
         reads=("score", "sim", "diag"),
         combines={"score": "sum"},     # each cell written once, from zero
+        donates=("score",),            # in-place wavefront accumulation
         est_block_work=64.0,
     )
 
@@ -652,6 +655,7 @@ def make_srad_stats(h: int, w: int, block: int) -> KernelDef:
         shared={"s1": ((block,), jnp.float32),
                 "s2": ((block,), jnp.float32)},
         combines={"psum": "sum", "psq": "sum"},
+        donates=("psum", "psq"),       # re-zeroed partials: alias freely
         est_block_work=block * 8.0,
     )
 
@@ -692,6 +696,7 @@ def make_srad_update(h: int, w: int, lam: float = 0.2, tile_y: int = 8,
         "srad_update", (stage,), writes=("y",),
         reads=("x", "psum", "psq", "y"),
         combines={"y": "sum"},         # y re-zeroed per launch: exact
+        donates=("y",),                # ping-pong target of the x<->y swap
         est_block_work=tile_y * tile_x * 24.0,
     )
 
@@ -711,10 +716,15 @@ class SuiteEntry:
     ``nondeterministic_shard`` names scratch buffers whose *bit* pattern
     legitimately differs between the shard and single-device backends
     (e.g. a deduplicated-on-one-device win counter) - excluded from
-    cross-backend bit comparisons, never from semantic checks; ``rodinia``
-    records the benchmark counterpart for the coverage table;
-    ``dim3_free`` marks kernels that read only linearized ids, so any
-    ``Dim3`` factorization of the same grid size is equivalent.
+    cross-backend bit comparisons, never from semantic checks;
+    ``iteration_state`` names per-iteration chain scratch (stop counters,
+    frontier ping-pongs) whose final bits depend on the stop-poll cadence
+    - device-resident replays may overshoot a converged stop flag by up
+    to ``check_every - 1`` no-op iterations, so these are excluded from
+    host-hop-vs-device-resident bit comparisons (the oracle outputs never
+    are); ``rodinia`` records the benchmark counterpart for the coverage
+    table; ``dim3_free`` marks kernels that read only linearized ids, so
+    any ``Dim3`` factorization of the same grid size is equivalent.
     """
 
     name: str
@@ -731,12 +741,15 @@ class SuiteEntry:
     rodinia: str = ""
     dim3_free: bool = True
     nondeterministic_shard: tuple[str, ...] = ()
+    iteration_state: tuple[str, ...] = ()
 
 
 def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
               args: dict | None = None, grain=1, devices=None, pool=None,
               interpret: bool = True, grid=None, block=None,
-              with_reference: bool = True):
+              with_reference: bool = True, chain_mode: str = "host",
+              chain_stats: ChainStats | None = None,
+              check_every: int | None = None):
     """Execute a suite entry end-to-end under one backend.
 
     The single place that knows how to *drive* an entry: plain entries are
@@ -747,6 +760,13 @@ def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
     the final buffer dict and the numpy oracle's expectation
     (``with_reference=False`` skips the oracle and returns ``want=None``:
     wall-clock benchmarks must not time the pure-Python reference).
+
+    ``chain_mode`` selects the chain replay path (ignored for plain
+    entries only if "host"): ``"host"`` is the per-iteration host-hop
+    baseline, ``"device"`` the device-resident replay (on-device update
+    hooks, stop polled every ``check_every`` iterations), ``"graph"`` the
+    graph-captured replay (iterations fused into jitted graph
+    dispatches).  ``chain_stats`` collects replay counters.
     """
     if args is None:
         args = entry.make_args(rng if rng is not None
@@ -759,6 +779,10 @@ def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
     kw = dict(backend=backend, grain=grain, devices=devices, pool=pool,
               interpret=interpret)
     if entry.chain is None:
+        if chain_mode != "host":
+            raise ValueError(
+                f"entry {entry.name}: chain_mode={chain_mode!r} needs a "
+                f"LaunchChain entry (this one is a single launch)")
         out = launch(entry.kernel,
                      grid=entry.grid if grid is None else grid,
                      block=entry.block if block is None else block,
@@ -773,7 +797,21 @@ def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
             return launch(step.kernel, grid=step.grid, block=step.block,
                           args=b, dyn_shared=step.dyn_shared, **kw)
 
-        out = entry.chain.run(launch_step, bufs)
+        if chain_mode == "host":
+            out = entry.chain.run(launch_step, bufs, stats=chain_stats)
+        elif chain_mode == "device":
+            out = entry.chain.run_device(launch_step, bufs,
+                                         check_every=check_every,
+                                         stats=chain_stats)
+        elif chain_mode == "graph":
+            from repro.core.streams import Stream
+            stream = Stream(dict(bufs))
+            out = entry.chain.run_graph(stream, check_every=check_every,
+                                        stats=chain_stats, **kw)
+        else:
+            raise ValueError(
+                f"unknown chain_mode {chain_mode!r}; "
+                f"expected host | device | graph")
     return out, want
 
 
@@ -962,10 +1000,21 @@ def entry_bfs_frontier(n: int = 64, deg: int = 4) -> SuiteEntry:
                 "active": jnp.zeros_like(bufs["active"]),
                 "level": jnp.full((1,), it, jnp.int32)}
 
+    def update(bufs):
+        # device-resident prepare: the level counter lives on device and
+        # increments there - no per-iteration h2d of a fresh host scalar
+        return {"frontier": bufs["nxt"],
+                "nxt": jnp.zeros_like(bufs["nxt"]),
+                "active": jnp.zeros_like(bufs["active"]),
+                "level": bufs["level"] + 1}
+
     chain = LaunchChain(
-        steps=(ChainStep(kernel, grid, block, prepare=prepare),),
+        steps=(ChainStep(kernel, grid, block, prepare=prepare,
+                         update=update),),
         repeat=n,                 # upper bound; stop flag exits early
         stop=lambda bufs: int(np.asarray(bufs["active"])[0]) == 0,
+        device_stop=lambda bufs: bufs["active"][0] == 0,
+        check_every=4,            # device-resident stop-poll period
     )
     return SuiteEntry(
         "bfs_frontier", ("atomic_cas", "warp", "const", "chain"),
@@ -975,6 +1024,9 @@ def entry_bfs_frontier(n: int = 64, deg: int = 4) -> SuiteEntry:
         # the win counter dedups per device: shards that independently
         # claim the same node both count it (loop counts it once)
         nondeterministic_shard=("active",),
+        # overshooting a converged frontier is a no-op for dist/visited,
+        # but leaves the ping-pong scratch at a cadence-dependent state
+        iteration_state=("frontier", "nxt", "active", "level"),
     )
 
 
@@ -1008,8 +1060,15 @@ def entry_pathfinder(scale: int = 1, dtype=jnp.int32) -> SuiteEntry:
             upd["src"] = bufs["dst"]
         return upd
 
+    def update(bufs):
+        # device-resident ping-pong: src aliases the previous dst, the
+        # row counter increments on device
+        return {"src": bufs["dst"], "dst": jnp.zeros_like(bufs["dst"]),
+                "row": bufs["row"] + 1}
+
     chain = LaunchChain(
-        steps=(ChainStep(kernel, grid, block, prepare=prepare),),
+        steps=(ChainStep(kernel, grid, block, prepare=prepare,
+                         update=update),),
         repeat=rows - 1,
     )
     return SuiteEntry(
@@ -1047,7 +1106,8 @@ def entry_needle_nw(n: int = 32, penalty: int = 2,
         steps=(ChainStep(
             kernel, grid, block,
             prepare=lambda it, bufs: {"diag": jnp.full((1,), it + 2,
-                                                       jnp.int32)}),),
+                                                       jnp.int32)},
+            update=lambda bufs: {"diag": bufs["diag"] + 1}),),
         repeat=2 * n - 1,
     )
     return SuiteEntry(
@@ -1154,8 +1214,15 @@ def entry_srad_step(scale: int = 1, iters: int = 2,
                 "psum": jnp.zeros_like(bufs["psum"]),
                 "psq": jnp.zeros_like(bufs["psq"])}
 
+    def upd_stats(bufs):
+        # device-resident x<->y ping-pong + partials re-zero
+        return {"x": bufs["y"], "y": jnp.zeros_like(bufs["y"]),
+                "psum": jnp.zeros_like(bufs["psum"]),
+                "psq": jnp.zeros_like(bufs["psq"])}
+
     chain = LaunchChain(
-        steps=(ChainStep(stats_k, grid1, block, prepare=prep_stats),
+        steps=(ChainStep(stats_k, grid1, block, prepare=prep_stats,
+                         update=upd_stats),
                ChainStep(update_k, (w // 8, h // 8), (8, 8))),
         repeat=iters,
     )

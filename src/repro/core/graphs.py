@@ -27,12 +27,13 @@ parallel - the "batching" of independent nodes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import api
+from repro.core import memory as memory_mod
 from repro.core.backends import get_backend
 from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef
@@ -46,10 +47,14 @@ class GraphError(RuntimeError):
 class GraphNode:
     """One captured operation.
 
-    ``kind`` is ``"kernel"`` | ``"h2d"`` | ``"event_record"`` |
-    ``"event_wait"``; event nodes carry ordering only and execute nothing
-    at replay.  ``deps`` are indices of nodes that must precede this one
-    (always smaller than ``idx``, so node order is already topological).
+    ``kind`` is ``"kernel"`` | ``"h2d"`` | ``"d2d"`` | ``"update"`` |
+    ``"event_record"`` | ``"event_wait"``; event nodes carry ordering
+    only and execute nothing at replay.  ``deps`` are indices of nodes
+    that must precede this one (always smaller than ``idx``, so node
+    order is already topological).  ``d2d`` copies heap buffer ``src``
+    onto ``buffer``; ``update`` applies the pure on-device heap function
+    ``fn`` (a captured :meth:`Stream.device_update`) inside the fused
+    replay.
     """
 
     idx: int
@@ -69,9 +74,12 @@ class GraphNode:
     shard_axis: str = "blocks"
     reads: tuple[str, ...] = ()
     writes: tuple[str, ...] = ()
-    # h2d fields
+    # h2d / d2d fields
     buffer: str | None = None
     host: Any = None
+    src: str | None = None
+    # update fields
+    fn: Callable | None = None
 
 
 class Graph:
@@ -163,6 +171,38 @@ class Graph:
                                                  (buffer,)))),
             label=f"h2d:{buffer}", buffer=buffer, host=host,
             writes=(buffer,))
+        return self._commit(node)
+
+    def add_d2d(self, stream, dst: str, src: str) -> GraphNode:
+        """Capture a device-to-device copy between named heap buffers."""
+        known = set(stream.buffers) | self.written()
+        if src not in known:
+            raise GraphError(
+                f"capture on stream {stream.name!r}: d2d source {src!r} "
+                f"exists neither on the heap nor earlier in the graph")
+        idx = len(self.nodes)
+        node = GraphNode(
+            idx=idx, kind="d2d", stream=stream.name,
+            deps=tuple(sorted(self._ordered_deps(stream.name, (src,),
+                                                 (dst,)))),
+            label=f"d2d:{src}->{dst}", buffer=dst, src=src,
+            reads=(src,), writes=(dst,))
+        return self._commit(node)
+
+    def add_update(self, stream, fn, writes: tuple) -> GraphNode:
+        """Capture an on-device heap update (Stream.device_update).
+
+        The update reads the whole heap (its signature is the full buffer
+        dict), so it orders conservatively after every prior writer.
+        """
+        heap_names = tuple(sorted(set(stream.buffers) | self.written()))
+        idx = len(self.nodes)
+        node = GraphNode(
+            idx=idx, kind="update", stream=stream.name,
+            deps=tuple(sorted(self._ordered_deps(stream.name, heap_names,
+                                                 tuple(writes)))),
+            label=f"update:{','.join(writes)}", fn=fn,
+            reads=heap_names, writes=tuple(writes))
         return self._commit(node)
 
     def add_event_record(self, stream, event) -> GraphNode:
@@ -271,6 +311,12 @@ class GraphExec:
             elif node.kind == "h2d":
                 glob[node.buffer] = host[hi]
                 hi += 1
+            elif node.kind == "d2d":
+                glob[node.buffer] = glob[node.src]
+            elif node.kind == "update":
+                upd = node.fn(dict(glob))
+                for b in node.writes:
+                    glob[b] = upd[b]
             # event nodes: ordering only, nothing to execute
         return {b: glob[b] for b in self.written}
 
@@ -279,7 +325,10 @@ class GraphExec:
         if missing:
             raise GraphError(
                 f"graph replay needs buffer(s) {missing} on the heap")
-        return {b: buffers[b] for b in self.inputs}
+        # ConstArray/DeviceBuffer heap entries unwrap (liveness-checked)
+        # here: the jitted replay traces over raw arrays only
+        return {b: memory_mod.unwrap(buffers[b], "graph replay")
+                for b in self.inputs}
 
     def validate(self, buffers: dict) -> None:
         """Abstractly trace the replay to surface shape/support errors."""

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import atomics, lower_loop, lower_vector
+from repro.core import memory as memory_mod
 from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef, UnsupportedKernel
 
@@ -102,7 +103,26 @@ def _combine_modes(kernel: KernelDef) -> dict[str, str]:
 def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
         devices: int | None = None, shard_axis: str = DEFAULT_AXIS,
         inner: str = "loop"):
-    """Execute the launch with its blocks sharded across XLA devices."""
+    """Execute the launch with its blocks sharded across XLA devices.
+
+    ``glob`` must hold raw arrays: the tracked-buffer wrappers
+    (:class:`~repro.core.memory.DeviceBuffer`, ``ConstArray``) are
+    unwrapped - with liveness/const checks and donation bookkeeping - on
+    the shared :mod:`repro.core.api` launch path.  A wrapper reaching
+    ``shard_map`` directly would die in an opaque pytree error, so catch
+    it here with the actual fix.  Donated buffers are safe under every
+    combine mode: XLA's input-output aliasing preserves the pre-launch
+    value the ``"sum"`` combine reads (``g + psum(out - g)``), copying
+    only when lifetimes overlap.
+    """
+    bad = [n for n, v in glob.items()
+           if isinstance(v, (memory_mod.ConstArray,
+                             memory_mod.DeviceBuffer))]
+    if bad:
+        raise TypeError(
+            f"shard backend received wrapped buffer object(s) {sorted(bad)}"
+            f"; launch through repro.core.api (kernel[grid, block](...) or "
+            f"launch(...)) so handles are liveness-checked and unwrapped")
     grid, block = Dim3.of(grid), Dim3.of(block)
     inner_run = _INNER[inner]
     modes = _combine_modes(kernel)

@@ -1,4 +1,4 @@
-"""CUDA memory-space mapping (paper SIII-B.1, Fig. 3/4).
+"""CUDA memory mapping + tracked device-buffer runtime (SIII-B.1, Fig. 3/4).
 
 | CUDA space       | CuPBoP on CPU (paper)       | CuPBoP-JAX on TPU        |
 |------------------|-----------------------------|--------------------------|
@@ -14,8 +14,9 @@ while the same user code linked against the CUDA runtime would hit the GPU.
 
 Spaces are *honored*, not just recorded:
 
-* ``GLOBAL``/``LOCAL`` allocate a plain HBM buffer (local memory is spilled
-  thread-private state - on the targets here it is just heap);
+* ``GLOBAL``/``LOCAL`` allocate a tracked :class:`DeviceBuffer` handle
+  (local memory is spilled thread-private state - on the targets here it
+  is just heap);
 * ``SHARED`` raises: ``__shared__`` memory is block-scoped and lives in the
   kernel's ``KernelDef.shared`` declaration (VMEM), never on the heap - the
   seed silently handed back an HBM buffer, which type-checked and then
@@ -26,10 +27,35 @@ Spaces are *honored*, not just recorded:
   centrally in :mod:`repro.core.api` so loop/vector/pallas/shard all honor
   it;
 * ``TEXTURE`` raises, as in the paper.
+
+Allocations are also *tracked*: a :class:`DeviceBuffer` carries an
+allocation id, its space, and a live/freed lifecycle bit.  ``cuda_free``
+invalidates the handle and releases the storage; any later use - a copy,
+a launch binding, a host read, a second free - raises :class:`CudaError`
+(the ``cudaErrorInvalidValue`` analogue).  The checks run on the single
+launch path shared by every backend (:func:`resolve_launch_args`), so a
+stale handle fails identically under loop/vector/pallas/shard.
+
+``cuda_memcpy_async`` is ``cudaMemcpyAsync``: the copy kind (h2d/d2h/d2d)
+is inferred from the operand types (``cudaMemcpyDefault``), name operands
+address a stream's named heap (hazard-ordered and capturable as graph
+memcpy nodes), and handle operands ride JAX's asynchronous dispatch -
+only a d2h actually blocks the host.
+
+Declared **donation** closes the loop with the launch path: a kernel may
+name written buffers in ``KernelDef.donates`` (a subset of ``writes``,
+hashed into the kernel fingerprint).  When such a buffer is bound to a
+live :class:`DeviceBuffer` at launch, the input storage is donated to XLA
+(``donate_argnums``) and the handle is re-bound to the kernel's output -
+the caller's view stays CUDA-faithful ("the kernel wrote my buffer in
+place") while ping-pong chains alias instead of copy.  Buffers bound as
+plain arrays keep functional no-alias semantics, and a buffer the kernel
+reads is never donated unless declared.
 """
 from __future__ import annotations
 
 import enum
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +72,17 @@ class Space(enum.Enum):
 
 class UnsupportedSpace(Exception):
     pass
+
+
+class CudaError(Exception):
+    """``cudaErrorInvalidValue`` analogue: an invalid-handle operation.
+
+    Raised for double frees, use of freed handles (copies, launch
+    bindings, host reads), and geometry-mismatched copies.
+    """
+
+
+_ALLOC_IDS = itertools.count(1)
 
 
 class ConstArray:
@@ -81,8 +118,93 @@ class ConstArray:
         return f"ConstArray(shape={self.shape}, dtype={self.dtype})"
 
 
+class DeviceBuffer:
+    """A tracked device allocation: what ``cudaMalloc`` hands back.
+
+    The handle owns a device array plus lifecycle state; ``cuda_free``
+    invalidates it, after which every access raises :class:`CudaError`
+    instead of silently reading stale storage (the seed's
+    ``cuda_memcpy_d2h`` accepted any array-shaped object, so a logically
+    freed buffer kept working).  Launches re-bind the handle in place
+    when the kernel declares the buffer in ``donates`` - the CUDA view
+    that device memory is mutated through a stable pointer.
+    """
+
+    __slots__ = ("_value", "alloc_id", "space", "_state")
+
+    def __init__(self, value, space: Space = Space.GLOBAL):
+        self._value = jnp.asarray(value)
+        self.alloc_id = next(_ALLOC_IDS)
+        self.space = space
+        self._state = "live"
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def live(self) -> bool:
+        return self._state == "live"
+
+    def _require_live(self, op: str):
+        if self._state != "live":
+            raise CudaError(
+                f"cudaErrorInvalidValue: {op} on {self._state} DeviceBuffer "
+                f"#{self.alloc_id} (use-after-free)")
+
+    def _free(self):
+        if self._state != "live":
+            raise CudaError(
+                f"cudaErrorInvalidValue: double free of DeviceBuffer "
+                f"#{self.alloc_id}")
+        self._state = "freed"
+        self._value = None          # actually release the device storage
+
+    def _rebind(self, value):
+        """Point the handle at new storage (launch output / h2d target)."""
+        self._require_live("write")
+        self._value = value
+
+    # -- array-like surface --------------------------------------------------
+    @property
+    def value(self):
+        self._require_live("read")
+        return self._value
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+    def __array__(self, dtype=None):
+        arr = np.asarray(jax.device_get(self.value))
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def __repr__(self):
+        if self._state != "live":
+            return f"DeviceBuffer(#{self.alloc_id}, {self._state})"
+        return (f"DeviceBuffer(#{self.alloc_id}, shape={self.shape}, "
+                f"dtype={self.dtype}, space={self.space.value})")
+
+
+def unwrap(buf, op: str = "access"):
+    """The raw device array behind a handle (liveness-checked), or ``buf``.
+
+    The one spot that turns user-facing buffer objects (:class:`ConstArray`,
+    :class:`DeviceBuffer`) into arrays the lowerings can trace - every
+    copy/launch/graph path funnels through it so stale handles cannot leak
+    past the runtime layer.
+    """
+    if isinstance(buf, ConstArray):
+        return buf.value
+    if isinstance(buf, DeviceBuffer):
+        buf._require_live(op)
+        return buf._value
+    return buf
+
+
 def cuda_malloc(shape, dtype=jnp.float32, space: Space = Space.GLOBAL):
-    """cudaMalloc analogue: zero-filled device buffer in the given space."""
+    """cudaMalloc analogue: zero-filled tracked buffer in the given space."""
     if space is Space.TEXTURE:
         raise UnsupportedSpace(
             "texture memory is unsupported (paper Table II: hybridsort/"
@@ -96,7 +218,21 @@ def cuda_malloc(shape, dtype=jnp.float32, space: Space = Space.GLOBAL):
         )
     if space is Space.CONST:
         return ConstArray(jnp.zeros(shape, dtype))
-    return jnp.zeros(shape, dtype)
+    return DeviceBuffer(jnp.zeros(shape, dtype), space=space)
+
+
+def cuda_free(buf) -> None:
+    """cudaFree: invalidate the handle; double/stale frees raise.
+
+    ``__constant__`` symbols are module-scoped in CUDA (freed at unload,
+    never by ``cudaFree``), so freeing a :class:`ConstArray` is an invalid
+    value too.
+    """
+    if not isinstance(buf, DeviceBuffer):
+        raise CudaError(
+            f"cudaErrorInvalidValue: cuda_free of {type(buf).__name__} "
+            f"(only DeviceBuffer handles from cuda_malloc can be freed)")
+    buf._free()
 
 
 def cuda_memcpy_to_symbol(host) -> ConstArray:
@@ -104,23 +240,134 @@ def cuda_memcpy_to_symbol(host) -> ConstArray:
     return ConstArray(jax.device_put(np.asarray(host)))
 
 
-def cuda_memcpy_h2d(host: np.ndarray):
-    return jax.device_put(np.asarray(host))
+def cuda_memcpy_h2d(host, dst: DeviceBuffer | None = None):
+    """``cudaMemcpy`` host-to-device.
+
+    Bare it allocates-and-copies, returning a fresh tracked handle; with
+    ``dst`` it copies into an existing allocation (geometry-checked, like
+    CUDA's byte-count check) and returns it.
+    """
+    arr = jax.device_put(np.asarray(host))
+    if dst is None:
+        return DeviceBuffer(arr)
+    if not isinstance(dst, DeviceBuffer):
+        raise CudaError(
+            f"cudaErrorInvalidValue: h2d destination must be a DeviceBuffer "
+            f"handle, got {type(dst).__name__}")
+    _check_geometry("h2d", dst.shape, dst.dtype, arr.shape, arr.dtype)
+    dst._rebind(arr)
+    return dst
 
 
 def cuda_memcpy_d2h(dev) -> np.ndarray:
-    if isinstance(dev, ConstArray):
-        dev = dev.value
-    return np.asarray(jax.device_get(dev))
+    """``cudaMemcpy`` device-to-host: blocks until the value is ready.
+
+    Routes through the liveness check: the seed version accepted any
+    array-shaped object, so a freed handle silently kept reading its old
+    storage.
+    """
+    return np.asarray(jax.device_get(unwrap(dev, "cuda_memcpy_d2h")))
+
+
+def _check_geometry(kind, dshape, ddtype, sshape, sdtype):
+    if tuple(dshape) != tuple(sshape) or jnp.dtype(ddtype) != \
+            jnp.dtype(sdtype):
+        raise CudaError(
+            f"cudaErrorInvalidValue: {kind} copy geometry mismatch - "
+            f"destination ({tuple(dshape)}, {jnp.dtype(ddtype).name}) vs "
+            f"source ({tuple(sshape)}, {jnp.dtype(sdtype).name})")
+
+
+def cuda_memcpy_async(dst, src, stream=None):
+    """``cudaMemcpyAsync``: enqueue an h2d/d2h/d2d copy.
+
+    The copy kind is inferred from the operand types (the
+    ``cudaMemcpyDefault`` rule):
+
+    * **name operands** (strings) address ``stream``'s named heap and
+      require ``stream=``.  They participate in the stream's hazard
+      ordering and event waits, and h2d/d2d capture as graph memcpy
+      nodes (d2h stays host-visible and raises during capture, the
+      ``cudaErrorStreamCaptureUnsupported`` rule);
+    * **DeviceBuffer operands** are tracked handles: copies are liveness-
+      and geometry-checked and ride JAX's asynchronous dispatch for
+      device-side ordering (to capture a copy into a graph, name the
+      buffer on the stream instead);
+    * a **NumPy array** is host memory: host→X is h2d, X→host is d2h into
+      the preallocated array (the only form that blocks the host).
+
+    Copies into ``__constant__`` space (:class:`ConstArray`) raise
+    :class:`UnsupportedSpace` - constant memory is read-only on device.
+
+    Returns the destination operand (or the fetched ndarray for a bare
+    d2h with ``dst=None``).
+    """
+    # --- named-heap forms ---------------------------------------------------
+    if isinstance(dst, str) or isinstance(src, str):
+        if stream is None:
+            raise CudaError(
+                "cudaErrorInvalidValue: named-buffer copies address a "
+                "stream's heap; pass stream=")
+        if isinstance(dst, str):
+            if isinstance(src, (str, DeviceBuffer, ConstArray, jax.Array)):
+                stream.memcpy_d2d(dst, src)      # device-side source
+            else:
+                stream.memcpy_h2d(dst, np.asarray(src))
+            return dst
+        fetched = stream.memcpy_d2h(src)        # src is the named operand
+        if dst is None:
+            return fetched
+        _check_geometry("d2h", np.shape(dst), np.asarray(dst).dtype,
+                        fetched.shape, fetched.dtype)
+        np.copyto(dst, fetched)
+        return dst
+    # --- handle / host-array forms ------------------------------------------
+    if stream is not None and getattr(stream, "_capture", None) is not None:
+        from repro.core import graphs as graphs_mod
+        raise graphs_mod.GraphError(
+            f"cuda_memcpy_async over raw handles on capturing stream "
+            f"{stream.name!r}: handle copies are not graph nodes - copy "
+            f"through a named heap buffer to capture it")
+    if isinstance(dst, ConstArray):
+        raise UnsupportedSpace(
+            "cuda_memcpy_async destination is __constant__ (ConstArray); "
+            "constant memory is read-only on device "
+            "(cudaErrorInvalidSymbol)")
+    if isinstance(dst, DeviceBuffer):
+        dst._require_live("cuda_memcpy_async")
+        if isinstance(src, (DeviceBuffer, ConstArray)):      # d2d
+            val = unwrap(src, "cuda_memcpy_async")
+        else:                                                # h2d
+            val = jax.device_put(np.asarray(src))
+        _check_geometry("memcpy", dst.shape, dst.dtype, val.shape, val.dtype)
+        dst._rebind(val)
+        return dst
+    if isinstance(src, (DeviceBuffer, ConstArray)):          # d2h
+        fetched = cuda_memcpy_d2h(src)
+        if dst is None:
+            return fetched
+        _check_geometry("d2h", np.shape(dst), np.asarray(dst).dtype,
+                        fetched.shape, fetched.dtype)
+        np.copyto(dst, fetched)
+        return dst
+    raise CudaError(
+        f"cudaErrorInvalidValue: cannot infer copy kind from "
+        f"({type(dst).__name__}, {type(src).__name__}); operands must be "
+        f"heap names, DeviceBuffer handles, or host arrays")
 
 
 def resolve_launch_args(kernel, args: dict) -> dict:
-    """Enforce CONST-space semantics on a launch's buffer bindings.
+    """Enforce buffer-object semantics on a launch's bindings.
 
-    Rejects a :class:`ConstArray` bound to any buffer the kernel declares
-    in ``writes`` and unwraps the rest to plain arrays for packing.  Called
-    on the single launch path shared by all backends, so const-ness is
-    honored identically under loop/vector/pallas/shard.
+    The single launch path shared by all backends, so const-ness and
+    handle liveness are honored identically under loop/vector/pallas/
+    shard:
+
+    * a :class:`ConstArray` bound to a buffer the kernel ``writes``
+      raises :class:`UnsupportedSpace`;
+    * a freed :class:`DeviceBuffer` raises :class:`CudaError`
+      (``cudaErrorInvalidValue``), never launches on stale storage;
+    * everything unwraps to plain arrays for packing.
     """
     out = {}
     for name, buf in args.items():
@@ -132,6 +379,44 @@ def resolve_launch_args(kernel, args: dict) -> dict:
                     f"{tuple(kernel.writes)}; constant memory is read-only"
                 )
             out[name] = buf.value
+        elif isinstance(buf, DeviceBuffer):
+            if not buf.live:
+                raise CudaError(
+                    f"kernel {kernel.name}: buffer {name!r} bound to "
+                    f"{buf._state} DeviceBuffer #{buf.alloc_id} "
+                    f"(cudaErrorInvalidValue: use-after-free at launch)")
+            out[name] = buf._value
         else:
             out[name] = buf
     return out
+
+
+def donated_names(kernel, args: dict) -> tuple[str, ...]:
+    """Which launch bindings actually donate their input storage.
+
+    Donation needs both halves of the contract: the kernel *declared* the
+    buffer in ``donates`` (so aliasing a read is intentional) and the
+    caller bound a live :class:`DeviceBuffer` (so the consumed input
+    stays reachable only through the re-bound handle).  Plain-array
+    bindings keep functional no-alias semantics.
+    """
+    return tuple(sorted(
+        name for name in getattr(kernel, "donates", ())
+        if isinstance(args.get(name), DeviceBuffer)))
+
+
+def rebind_outputs(kernel, args: dict, out: dict) -> dict:
+    """Re-bind donated handles to the launch's outputs (CUDA in-place view).
+
+    For every ``donates`` buffer bound as a :class:`DeviceBuffer`, the
+    handle is pointed at the kernel's output array and returned in its
+    place, so chained launches keep passing the same handles - the
+    ping-pong aliasing of Rodinia's wavefront codes - while non-donated
+    bindings come back as plain arrays.
+    """
+    res = dict(out)
+    for name in donated_names(kernel, args):
+        handle = args[name]
+        handle._rebind(res[name])
+        res[name] = handle
+    return res

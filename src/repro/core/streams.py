@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core import api
 from repro.core import graphs as graphs_mod
+from repro.core import memory as memory_mod
 from repro.core.dim3 import Dim3
 from repro.core.kernel import KernelDef
 
@@ -254,7 +255,14 @@ class Stream:
         self.buffers[name] = jnp.zeros(shape, dtype)
         return name
 
+    def _forbid_const_dst(self, op: str, name: str):
+        if isinstance(self.buffers.get(name), memory_mod.ConstArray):
+            raise memory_mod.UnsupportedSpace(
+                f"{op} into heap buffer {name!r}: it is __constant__ "
+                f"(ConstArray); constant memory is read-only on device")
+
     def memcpy_h2d(self, name: str, host: np.ndarray):
+        self._forbid_const_dst("memcpy_h2d", name)
         if self._capture is not None:
             self._capture.add_h2d(self, name, np.asarray(host))
             return
@@ -262,10 +270,84 @@ class Stream:
         self._barrier_if_hazard({name})
         self.buffers[name] = jax.device_put(np.asarray(host))
 
+    def memcpy_d2d(self, dst: str, src):
+        """cudaMemcpyDeviceToDevice onto the named heap (capturable).
+
+        ``src`` is another heap name, or a device array / tracked handle
+        whose value lands on the heap.  Named-to-named copies capture as
+        graph ``d2d`` nodes; array-source copies capture like an h2d node
+        with a device-resident payload.  An existing destination must
+        match the source's geometry (CUDA's byte-count rule).
+        """
+        self._forbid_const_dst("memcpy_d2d", dst)
+
+        def check_against_heap(val):
+            # CUDA's byte-count rule, enforced at enqueue time on BOTH the
+            # eager and capture paths - a mismatched captured copy must
+            # fail here like its eager twin, not as an opaque shape error
+            # deep inside the jitted replay
+            have = self.buffers.get(dst)
+            if have is not None:
+                cur = memory_mod.unwrap(have, "memcpy_d2d")
+                memory_mod._check_geometry("d2d", cur.shape, cur.dtype,
+                                           val.shape, val.dtype)
+
+        if isinstance(src, str):
+            if self._capture is not None:
+                if src in self.buffers:
+                    check_against_heap(
+                        memory_mod.unwrap(self.buffers[src], "memcpy_d2d"))
+                self._capture.add_d2d(self, dst, src)  # validates the source
+                return
+            if src not in self.buffers:
+                raise KeyError(
+                    f"stream {self.name!r}: no source buffer {src!r} on the "
+                    f"heap; malloc/memcpy_h2d first (typo'd name?)")
+            self._barrier_if_hazard({dst, src})
+            val = memory_mod.unwrap(self.buffers[src], "memcpy_d2d")
+        else:
+            val = memory_mod.unwrap(src, "memcpy_d2d")
+            if self._capture is not None:
+                check_against_heap(val)
+                self._capture.add_h2d(self, dst, val)
+                return
+            self._barrier_if_hazard({dst})
+        check_against_heap(val)
+        self.buffers[dst] = val
+        self._mark_pending((dst,))
+
     def memcpy_d2h(self, name: str) -> np.ndarray:
         self._forbid_capture("memcpy_d2h")
         self._barrier_if_hazard({name})
-        return np.asarray(jax.device_get(self.buffers[name]))
+        return np.asarray(jax.device_get(
+            memory_mod.unwrap(self.buffers[name], "memcpy_d2h")))
+
+    def device_update(self, fn, writes: tuple | None = None) -> tuple:
+        """Apply an on-device heap update: ``fn(buffers) -> overrides``.
+
+        The device-resident analogue of host code between chained CUDA
+        launches: ``fn`` must be a pure, traceable function of the heap
+        (jnp ops only).  Eagerly it enqueues lazily - no host sync;
+        during capture it becomes a graph *update node* replayed inside
+        the fused dispatch.  ``writes`` names the updated buffers and is
+        inferred abstractly (``jax.eval_shape``) when omitted.  Returns
+        the written names.
+        """
+        raw = {n: memory_mod.unwrap(v, "device_update")
+               for n, v in self.buffers.items()}
+        if writes is None:
+            spec = {n: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                    for n, v in raw.items()}
+            writes = tuple(sorted(jax.eval_shape(fn, spec)))
+        for name in writes:
+            self._forbid_const_dst("device_update", name)
+        if self._capture is not None:
+            self._capture.add_update(self, fn, writes)
+            return writes
+        self._wait_foreign_writers(set(self.buffers))
+        self.buffers.update(fn(raw))
+        self._mark_pending(writes)
+        return writes
 
     # -- kernel launch (async; Fig. 5) ---------------------------------------
     def launch(self, kernel: KernelDef, *, grid, block,
@@ -281,8 +363,29 @@ class Stream:
         ``memcpy_h2d``, with the usual hazard ordering), so
         ``kernel[g, b, None, s](a=x)`` computes on ``x`` and the heap's
         other buffers - not on whatever the heap last held for ``a``.
+
+        ``args`` values may be tracked :class:`~repro.core.memory
+        .DeviceBuffer` handles: they are liveness-checked, their arrays
+        land on the heap, and handles bound to buffers the kernel
+        declares in ``donates`` are re-bound to the launch's output (the
+        CUDA in-place view) - the heap itself always holds raw arrays, so
+        hazard fences and event snapshots never see a stale handle.
+
+        Deliberately, stream launches do NOT donate storage to XLA (the
+        direct ``api.launch`` path does): an :class:`Event` recorded on
+        this stream fences the heap's *array snapshots*, and donating a
+        previously-written buffer would delete an array a live fence
+        still watches, poisoning ``event.synchronize()``.  Handle
+        re-binding is preserved; only the storage-aliasing optimization
+        is confined to the direct path.
         """
         grid, block = Dim3.of(grid), Dim3.of(block)
+        handles = {n: v for n, v in (args or {}).items()
+                   if isinstance(v, memory_mod.DeviceBuffer)}
+        if args:
+            args = {n: (memory_mod.unwrap(v, "launch") if n in handles
+                        else v)
+                    for n, v in args.items()}
         if self._capture is not None:
             known = set(self.buffers) | self._capture.written()
             missing = [n for n in (args or {}) if n not in known]
@@ -292,7 +395,8 @@ class Stream:
                     f"heap; malloc/memcpy_h2d first (typo'd name?)")
             for n, v in (args or {}).items():
                 if v is not None:       # arg update = captured h2d node
-                    self._capture.add_h2d(self, n, v)
+                    self._capture.add_h2d(self, n,
+                                          memory_mod.unwrap(v, "launch"))
             self._capture.add_kernel(
                 self, kernel, grid=grid, block=block, backend=backend,
                 grain=grain, dyn_shared=dyn_shared, interpret=interpret,
@@ -316,6 +420,9 @@ class Stream:
                          interpret=interpret, pool=pool, devices=devices,
                          shard_axis=shard_axis)
         self.buffers.update({n: new[n] for n in kernel.writes})
+        memory_mod.rebind_outputs(kernel, handles,
+                                  {n: new[n] for n in kernel.writes
+                                   if n in handles})
         self._mark_pending(kernel.writes)
         self.stats.launches += 1
         if self.policy is Policy.SYNC_ALWAYS:
@@ -495,8 +602,14 @@ class Runtime:
     def memcpy_h2d(self, name: str, host: np.ndarray):
         self.default.memcpy_h2d(name, host)
 
+    def memcpy_d2d(self, dst: str, src):
+        self.default.memcpy_d2d(dst, src)
+
     def memcpy_d2h(self, name: str) -> np.ndarray:
         return self.default.memcpy_d2h(name)
+
+    def device_update(self, fn, writes: tuple | None = None) -> tuple:
+        return self.default.device_update(fn, writes)
 
     # -- synchronization ------------------------------------------------------
     def synchronize(self):

@@ -117,6 +117,61 @@ def test_dtype_variants(name, tag, backend):
     assert cell.status == "pass", f"{cell.label()}: {cell.detail}"
 
 
+# --- the device-resident replay leg (ISSUE 5) --------------------------------
+def test_chain_cases_grow_mode_cells():
+    """Every chain case sweeps device_resident + graph replay-mode cells,
+    bit-anchored on the same backend's host-hop run."""
+    rep = run_matrix(cases=[CASES["pathfinder"]],
+                     backends=("loop", "vector"), variants=True)
+    by_mode = {}
+    for c in rep.cells:
+        by_mode.setdefault(c.mode, []).append(c)
+    assert set(by_mode) == {"host", "device_resident", "graph"}
+    assert not rep.disagreements
+    for mode in ("device_resident", "graph"):
+        assert {c.backend for c in by_mode[mode]} == {"loop", "vector"}
+        for c in by_mode[mode]:
+            assert c.anchor == f"{c.backend}/host"
+            assert c.bit_required and c.bit_identical, c.label()
+
+
+def test_single_launch_cases_have_no_mode_cells():
+    rep = run_matrix(cases=[CASES["vecadd"]], backends=("loop",),
+                     variants=True)
+    assert {c.mode for c in rep.cells} == {"host"}
+
+
+def test_mode_axis_in_matrix_json():
+    rep = run_matrix(cases=[CASES["needle_nw"]], backends=("loop",),
+                     variants=True)
+    js = report_to_json(rep)
+    modes = {c["mode"] for c in js["cells"]}
+    assert {"host", "device_resident", "graph"} <= modes
+    labeled = [c for c in rep.cells if c.mode == "graph"]
+    assert labeled and "mode=graph" in labeled[0].label()
+
+
+def test_mode_cell_detects_divergent_device_replay():
+    """A device replay whose bits drift from host-hop must fail the cell
+    (the gate self-test for the new axis)."""
+    import dataclasses as dc
+    case = CASES["needle_nw"]
+    base = case.make("i32")
+    chain = base.chain
+    # a poisoned update hook: advances the diagonal by 2, desyncing the
+    # device-resident replay from the host-hop one
+    bad_step = dc.replace(chain.steps[0],
+                          update=lambda b: {"diag": b["diag"] + 2})
+    bad_entry = dc.replace(base, chain=dc.replace(chain,
+                                                  steps=(bad_step,)))
+    bad_case = dc.replace(case, make=lambda tag: bad_entry)
+    rep = run_matrix(cases=[bad_case], backends=("loop",), variants=True)
+    bad_cells = [c for c in rep.cells if c.mode != "host"]
+    assert bad_cells and all(c.status == "fail" for c in bad_cells)
+    assert any("bits differ from host-hop" in c.detail
+               or "oracle mismatch" in c.detail for c in bad_cells)
+
+
 # --- the report --------------------------------------------------------------
 def test_matrix_report_structure():
     cases = [CASES["vecadd"], CASES["bfs_frontier"]]
@@ -173,7 +228,8 @@ def test_cell_label_roundtrip():
 _CHILD = r"""
 import jax
 assert jax.device_count() == 4, jax.device_count()
-from repro.core.conformance import build_cases, run_matrix
+import numpy as np
+from repro.core.conformance import build_cases, run_cell, run_matrix
 names = {"bfs_frontier", "backprop_layer", "lud_diag"}
 cases = [c for c in build_cases() if c.name in names]
 rep = run_matrix(cases=cases, backends=("loop", "vector", "shard",
@@ -185,6 +241,20 @@ assert not bad, bad
 # the multi-device legs really ran and owed (and met) bit-identity
 multi = [c for c in rep.cells if c.devices == 4]
 assert multi and all(c.status == "pass" and c.bit_identical for c in multi)
+# device-resident chain replay at genuine 4-way sharding: bit-identical
+# to the shard host-hop run outside the stop-poll-cadence scratch
+case = next(c for c in build_cases() if c.name == "bfs_frontier")
+entry = case.make("i32")
+hc, ho = run_cell(entry, case, "shard", "i32", entry.grid, entry.block,
+                  1, 4)
+dc, do = run_cell(entry, case, "shard", "i32", entry.grid, entry.block,
+                  1, 4, "device_resident")
+assert hc.status == "pass" and dc.status == "pass", (hc.detail, dc.detail)
+skip = set(entry.iteration_state) | set(entry.nondeterministic_shard)
+for k in do:
+    if k not in skip:
+        assert (np.asarray(do[k]).tobytes()
+                == np.asarray(ho[k]).tobytes()), k
 print("child-ok")
 """
 

@@ -393,3 +393,128 @@ def test_cache_entries_still_die_with_kernel():
     del k
     gc.collect()
     assert api.cache_size() == 0
+
+
+# --- memcpy nodes: d2d capture + async copy ordering (ISSUE 5) ---------------
+def test_captured_d2d_replays_identically_to_eager():
+    """A graph holding [h2d, d2d, kernel] nodes replays bit-identically
+    to the same eager sequence."""
+    from repro.core import cuda_memcpy_async
+    n, block = 256, 128
+    k = make_scale(n, "b", "c", 2.0)
+    x = np.arange(n, dtype=np.float32)
+    init = {"a": jnp.zeros(n, jnp.float32), "b": jnp.zeros(n, jnp.float32),
+            "c": jnp.zeros(n, jnp.float32)}
+
+    def pipeline(s):
+        cuda_memcpy_async("a", x, stream=s)        # h2d node
+        cuda_memcpy_async("b", "a", stream=s)      # d2d node
+        k[2, block, None, s]()                     # kernel node
+
+    eager = Stream(dict(init))
+    pipeline(eager)
+    captured = Stream(dict(init))
+    g = captured.begin_capture()
+    pipeline(captured)
+    captured.end_capture()
+    assert [nd.kind for nd in g.nodes] == ["h2d", "d2d", "kernel"]
+    # the d2d node orders after the h2d writer of its source (RAW)
+    assert g.nodes[0].idx in g.nodes[1].deps
+    g.instantiate(captured.buffers).launch(captured)
+    for name in ("a", "b", "c"):
+        np.testing.assert_array_equal(captured.memcpy_d2h(name),
+                                      eager.memcpy_d2h(name))
+    np.testing.assert_allclose(captured.memcpy_d2h("c"), 2.0 * x)
+
+
+def test_captured_update_node_replays_identically():
+    """Stream.device_update captures as an update node inside the fused
+    dispatch."""
+    n, block = 256, 128
+    k = make_scale(n, "a", "b", 3.0)
+    init = {"a": jnp.ones(n, jnp.float32), "b": jnp.zeros(n, jnp.float32)}
+    bump = lambda h: {"a": h["a"] + 1.0}
+
+    eager = Stream(dict(init))
+    eager.device_update(bump)
+    k[2, block, None, eager]()
+    captured = Stream(dict(init))
+    g = captured.begin_capture()
+    captured.device_update(bump)
+    k[2, block, None, captured]()
+    captured.end_capture()
+    assert [nd.kind for nd in g.nodes] == ["update", "kernel"]
+    assert g.nodes[0].idx in g.nodes[1].deps     # RAW on "a"
+    g.instantiate(captured.buffers).launch(captured)
+    np.testing.assert_array_equal(captured.memcpy_d2h("b"),
+                                  eager.memcpy_d2h("b"))
+    np.testing.assert_allclose(captured.memcpy_d2h("b"), 6.0)
+
+
+def test_memcpy_async_observes_event_wait():
+    """cudaMemcpyAsync on a stream that waited on an event orders after
+    the fenced producer (cudaStreamWaitEvent -> copy)."""
+    from repro.core import cuda_memcpy_async
+    n, block = 256, 128
+    producer = make_scale(n, "a", "x", 2.0)
+    rt = Runtime({"a": jnp.ones(n, jnp.float32),
+                  "x": jnp.zeros(n, jnp.float32),
+                  "y": jnp.zeros(n, jnp.float32)})
+    s0, s1 = rt.stream("compute"), rt.stream("copy")
+    producer[2, block, None, s0]()
+    ev = rt.event("produced")
+    ev.record(s0)
+    s1.wait_event(ev)
+    cuda_memcpy_async("y", "x", stream=s1)       # must see s0's write
+    np.testing.assert_allclose(s1.memcpy_d2h("y"), 2.0)
+
+
+def test_memcpy_async_cross_stream_hazard_barrier():
+    """A named d2d whose source has an in-flight foreign writer inserts
+    the implicit barrier (Listing 4, stream-to-stream) - no event needed."""
+    from repro.core import cuda_memcpy_async
+    n, block = 256, 128
+    producer = make_scale(n, "a", "x", 5.0)
+    rt = Runtime({"a": jnp.ones(n, jnp.float32),
+                  "x": jnp.zeros(n, jnp.float32),
+                  "y": jnp.zeros(n, jnp.float32)})
+    s0, s1 = rt.stream("s0"), rt.stream("s1")
+    producer[2, block, None, s0]()
+    assert "x" in s0._pending
+    before = s1.stats.barriers_inserted
+    cuda_memcpy_async("y", "x", stream=s1)
+    assert s1.stats.barriers_inserted == before + 1
+    np.testing.assert_allclose(s1.memcpy_d2h("y"), 5.0)
+
+
+def test_raw_handle_copy_rejected_during_capture():
+    from repro.core import GraphError, cuda_malloc, cuda_memcpy_async
+    a = cuda_malloc((8,), jnp.float32)
+    s = Stream({"x": jnp.zeros(8, jnp.float32)})
+    s.begin_capture()
+    with pytest.raises(GraphError, match="named heap buffer"):
+        cuda_memcpy_async(a, np.ones(8, np.float32), stream=s)
+    s.end_capture()
+
+
+def test_captured_d2d_unknown_source_raises():
+    from repro.core import GraphError
+    s = Stream({"x": jnp.zeros(8, jnp.float32)})
+    s.begin_capture()
+    with pytest.raises(GraphError, match="d2d source"):
+        s.memcpy_d2d("x", "ghost")
+    s.end_capture()
+
+
+def test_const_heap_buffer_replays_through_graph():
+    """ConstArray heap entries unwrap at replay time (bfs's edges case)."""
+    from repro.core import cuda_memcpy_to_symbol
+    n, block = 256, 128
+    k = make_scale(n, "a", "b", 2.0)
+    s = Stream({"a": cuda_memcpy_to_symbol(np.ones(n, np.float32)),
+                "b": jnp.zeros(n, jnp.float32)})
+    g = s.begin_capture()
+    k[2, block, None, s]()
+    s.end_capture()
+    g.instantiate(s.buffers).launch(s)
+    np.testing.assert_allclose(s.memcpy_d2h("b"), 2.0)

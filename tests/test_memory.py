@@ -1,10 +1,18 @@
-"""CUDA memory-space semantics: spaces are honored, not just recorded.
+"""CUDA memory semantics: spaces honored + allocations lifecycle-tracked.
 
-Regression for the seed behavior where ``cuda_malloc`` silently returned a
-plain HBM buffer for SHARED/CONST: shared-space mallocs now raise (shared
-memory is declared on the kernel), and const-space buffers come back as
-read-only :class:`ConstArray` views that every backend's launch path
-refuses to bind to a written buffer.
+Regressions for two generations of silent acceptance:
+
+* the seed's ``cuda_malloc`` returned a plain HBM buffer for SHARED/CONST
+  - shared-space mallocs now raise (shared memory is declared on the
+  kernel) and const-space buffers come back as read-only
+  :class:`ConstArray` views that every backend's launch path refuses to
+  bind to a written buffer;
+* the pre-DeviceBuffer ``cuda_memcpy_d2h`` accepted any array-shaped
+  object, so a logically freed buffer silently kept reading its old
+  storage - copies and launch bindings now route through the handle
+  liveness check and raise ``cudaErrorInvalidValue`` analogues
+  (:class:`CudaError`) for double frees and use-after-free, under every
+  backend.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -12,14 +20,23 @@ import pytest
 
 from repro.core import (
     ConstArray,
+    CudaError,
+    DeviceBuffer,
     Space,
+    Stream,
     UnsupportedSpace,
+    cuda_free,
     cuda_malloc,
+    cuda_memcpy_async,
     cuda_memcpy_d2h,
+    cuda_memcpy_h2d,
     cuda_memcpy_to_symbol,
     launch,
 )
-from repro.core.cuda_suite import make_vecadd
+from repro.core.cuda_suite import OOB, make_vecadd
+from repro.core.kernel import KernelDef
+
+ALL_BACKENDS = ["loop", "vector", "pallas", "shard"]
 
 
 def _vecadd_args(n=128):
@@ -28,10 +45,17 @@ def _vecadd_args(n=128):
             "c": jnp.zeros(n, jnp.float32)}
 
 
-def test_global_malloc_plain_buffer():
+# --- spaces ------------------------------------------------------------------
+def test_global_malloc_tracked_buffer():
     buf = cuda_malloc((8,), jnp.float32)
-    assert buf.shape == (8,) and not isinstance(buf, ConstArray)
+    assert isinstance(buf, DeviceBuffer) and not isinstance(buf, ConstArray)
+    assert buf.shape == (8,) and buf.live and buf.space is Space.GLOBAL
     np.testing.assert_array_equal(np.asarray(buf), np.zeros(8))
+
+
+def test_alloc_ids_are_unique():
+    a, b = cuda_malloc((4,), jnp.float32), cuda_malloc((4,), jnp.float32)
+    assert a.alloc_id != b.alloc_id
 
 
 def test_shared_malloc_rejected():
@@ -61,7 +85,139 @@ def test_memcpy_to_symbol_and_d2h():
     np.testing.assert_array_equal(cuda_memcpy_d2h(sym), host)
 
 
-@pytest.mark.parametrize("backend", ["loop", "vector", "pallas", "shard"])
+# --- lifecycle: free / double-free / use-after-free --------------------------
+def test_free_then_double_free_raises():
+    buf = cuda_malloc((16,), jnp.float32)
+    cuda_free(buf)
+    assert not buf.live
+    with pytest.raises(CudaError, match="double free"):
+        cuda_free(buf)
+
+
+def test_free_of_untracked_objects_raises():
+    with pytest.raises(CudaError, match="only DeviceBuffer"):
+        cuda_free(jnp.zeros(4))
+    with pytest.raises(CudaError, match="only DeviceBuffer"):
+        cuda_free(cuda_malloc((4,), jnp.float32, space=Space.CONST))
+
+
+def test_d2h_of_freed_handle_raises():
+    """Regression: cuda_memcpy_d2h silently accepted stale handles."""
+    buf = cuda_memcpy_h2d(np.arange(8, dtype=np.float32))
+    np.testing.assert_array_equal(cuda_memcpy_d2h(buf), np.arange(8))
+    cuda_free(buf)
+    with pytest.raises(CudaError, match="use-after-free"):
+        cuda_memcpy_d2h(buf)
+    with pytest.raises(CudaError, match="use-after-free"):
+        np.asarray(buf)
+
+
+def test_memcpy_async_with_freed_operands_raises():
+    live = cuda_malloc((8,), jnp.float32)
+    dead = cuda_malloc((8,), jnp.float32)
+    cuda_free(dead)
+    with pytest.raises(CudaError, match="cudaErrorInvalidValue"):
+        cuda_memcpy_async(dead, np.zeros(8, np.float32))
+    with pytest.raises(CudaError, match="cudaErrorInvalidValue"):
+        cuda_memcpy_async(live, dead)
+    with pytest.raises(CudaError, match="cudaErrorInvalidValue"):
+        cuda_memcpy_async(None, dead)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_freed_buffer_launch_binding_raises_every_backend(backend):
+    """A launch binding a freed handle must fail identically under every
+    lowering - the check lives on the shared launch path."""
+    n = 128
+    k = make_vecadd(n)
+    args = _vecadd_args(n)
+    args["a"] = cuda_memcpy_h2d(np.arange(n, dtype=np.float32))
+    cuda_free(args["a"])
+    with pytest.raises(CudaError, match="use-after-free at launch"):
+        launch(k, grid=1, block=n, args=args, backend=backend)
+
+
+# --- cuda_memcpy_async: kind inference + geometry + const --------------------
+def test_memcpy_async_h2d_d2d_d2h_roundtrip():
+    host = np.arange(12, dtype=np.float32).reshape(3, 4)
+    a = cuda_malloc((3, 4), jnp.float32)
+    assert cuda_memcpy_async(a, host) is a                   # h2d
+    b = cuda_malloc((3, 4), jnp.float32)
+    assert cuda_memcpy_async(b, a) is b                      # d2d
+    out = np.empty((3, 4), np.float32)
+    assert cuda_memcpy_async(out, b) is out                  # d2h in place
+    np.testing.assert_array_equal(out, host)
+    np.testing.assert_array_equal(cuda_memcpy_async(None, b), host)
+
+
+def test_memcpy_async_geometry_mismatch_raises():
+    a = cuda_malloc((8,), jnp.float32)
+    with pytest.raises(CudaError, match="geometry mismatch"):
+        cuda_memcpy_async(a, np.zeros(9, np.float32))
+    with pytest.raises(CudaError, match="geometry mismatch"):
+        cuda_memcpy_async(a, cuda_malloc((8,), jnp.int32))
+
+
+def test_memcpy_async_into_const_raises():
+    sym = cuda_memcpy_to_symbol(np.zeros(4, np.float32))
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        cuda_memcpy_async(sym, np.ones(4, np.float32))
+
+
+def test_memcpy_async_from_const_reads_fine():
+    sym = cuda_memcpy_to_symbol(np.arange(4, dtype=np.float32))
+    dst = cuda_malloc((4,), jnp.float32)
+    cuda_memcpy_async(dst, sym)
+    np.testing.assert_array_equal(np.asarray(dst), np.arange(4))
+
+
+def test_memcpy_async_named_requires_stream():
+    with pytest.raises(CudaError, match="stream="):
+        cuda_memcpy_async("x", np.zeros(4, np.float32))
+
+
+def test_memcpy_async_named_heap_forms():
+    s = Stream({"x": jnp.arange(8, dtype=jnp.float32),
+                "y": jnp.zeros(8, jnp.float32)})
+    cuda_memcpy_async("y", "x", stream=s)                    # named d2d
+    np.testing.assert_array_equal(s.memcpy_d2h("y"), np.arange(8))
+    cuda_memcpy_async("x", np.full(8, 7.0, np.float32), stream=s)   # h2d
+    got = np.empty(8, np.float32)
+    assert cuda_memcpy_async(got, "x", stream=s) is got      # named d2h
+    np.testing.assert_array_equal(got, 7.0)
+    buf = cuda_memcpy_h2d(np.full(8, 3.0, np.float32))
+    cuda_memcpy_async("y", buf, stream=s)                    # handle -> heap
+    np.testing.assert_array_equal(s.memcpy_d2h("y"), 3.0)
+
+
+def test_stream_d2d_geometry_and_const_guard():
+    s = Stream({"x": jnp.zeros(8, jnp.float32),
+                "c": cuda_memcpy_to_symbol(np.zeros(8, np.float32))})
+    with pytest.raises(CudaError, match="geometry mismatch"):
+        s.memcpy_d2d("x", jnp.zeros(9, jnp.float32))
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        s.memcpy_d2d("c", "x")
+    with pytest.raises(UnsupportedSpace, match="read-only"):
+        s.memcpy_h2d("c", np.zeros(8, np.float32))
+    with pytest.raises(KeyError, match="typo"):
+        s.memcpy_d2d("x", "nope")
+
+
+def test_captured_d2d_geometry_checked_at_enqueue():
+    """A mismatched copy must fail at capture like its eager twin, never
+    as an opaque shape error inside the jitted replay."""
+    s = Stream({"x": jnp.zeros(8, jnp.float32),
+                "y": jnp.zeros(9, jnp.float32)})
+    s.begin_capture()
+    with pytest.raises(CudaError, match="geometry mismatch"):
+        s.memcpy_d2d("x", "y")                       # named source
+    with pytest.raises(CudaError, match="geometry mismatch"):
+        s.memcpy_d2d("x", jnp.zeros(9, jnp.float32))  # array source
+    assert s.end_capture().nodes == []
+
+
+# --- const enforcement on the launch path ------------------------------------
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
 def test_const_read_ok_every_backend(backend):
     """ConstArray inputs launch fine when only read."""
     n = 128
@@ -73,7 +229,7 @@ def test_const_read_ok_every_backend(backend):
                                np.arange(n) + 1.0, rtol=1e-6)
 
 
-@pytest.mark.parametrize("backend", ["loop", "vector", "pallas", "shard"])
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
 def test_const_write_rejected_every_backend(backend):
     """Regression: binding __constant__ memory to a written buffer must
     raise under every lowering (it used to silently write)."""
@@ -92,3 +248,102 @@ def test_const_write_rejected_via_chevron():
     args["c"] = cuda_malloc((n,), jnp.float32, space=Space.CONST)
     with pytest.raises(UnsupportedSpace, match="read-only"):
         k[1, n](args)
+
+
+# --- launches over handles + donation ----------------------------------------
+def make_inc(n):
+    """x += 1 in place: a read+write kernel for aliasing checks."""
+    def stage(ctx, st):
+        gid = ctx.bid * ctx.block_dim + ctx.tid
+        val = st.glob["x"][jnp.minimum(gid, n - 1)] + 1
+        idx = jnp.where(gid < n, gid, OOB)
+        return st.set_glob(x=st.glob["x"].at[idx].set(val, mode="drop"))
+    return stage
+
+
+@pytest.mark.parametrize("backend", ["loop", "vector"])
+def test_handle_bound_launch_every_buffer(backend):
+    n = 128
+    k = make_vecadd(n)
+    args = {"a": cuda_memcpy_h2d(np.arange(n, dtype=np.float32)),
+            "b": cuda_memcpy_h2d(np.ones(n, np.float32)),
+            "c": cuda_malloc((n,), jnp.float32)}
+    out = launch(k, grid=1, block=n, args=args, backend=backend)
+    np.testing.assert_allclose(np.asarray(out["c"]), np.arange(n) + 1.0)
+
+
+def test_undeclared_write_never_aliases_handle():
+    """Without a donates declaration the input handle keeps its value -
+    the functional no-alias contract (and the property the hypothesis
+    suite fuzzes)."""
+    n = 64
+    k = KernelDef("inc", (make_inc(n),), writes=("x",), reads=("x",))
+    h = cuda_memcpy_h2d(np.zeros(n, np.float32))
+    out = launch(k, grid=1, block=n, args={"x": h})
+    assert not isinstance(out["x"], DeviceBuffer)
+    np.testing.assert_array_equal(np.asarray(out["x"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(h), 0.0)   # input preserved
+
+
+def test_declared_donation_rebinds_same_handle():
+    """With donates declared, the launch consumes the input storage and
+    re-binds the SAME handle to the output - the CUDA in-place view."""
+    n = 64
+    k = KernelDef("inc", (make_inc(n),), writes=("x",), reads=("x",),
+                  donates=("x",))
+    h = cuda_memcpy_h2d(np.zeros(n, np.float32))
+    out = launch(k, grid=1, block=n, args={"x": h})
+    assert out["x"] is h and h.live
+    np.testing.assert_array_equal(np.asarray(h), 1.0)
+    # chained relaunches keep aliasing through the one handle
+    out = launch(k, grid=1, block=n, args={"x": out["x"]})
+    assert out["x"] is h
+    np.testing.assert_array_equal(np.asarray(h), 2.0)
+
+
+def test_donation_without_handle_stays_functional():
+    """Plain-array bindings never donate, even when declared: the caller
+    kept a direct reference, so the input must survive."""
+    n = 64
+    k = KernelDef("inc", (make_inc(n),), writes=("x",), reads=("x",),
+                  donates=("x",))
+    x = jnp.zeros(n, jnp.float32)
+    out = launch(k, grid=1, block=n, args={"x": x})
+    np.testing.assert_array_equal(np.asarray(out["x"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(x), 0.0)   # still alive
+
+
+def test_donates_must_be_written():
+    with pytest.raises(ValueError, match="only written buffers"):
+        KernelDef("bad", (make_inc(4),), writes=("x",), donates=("y",))
+
+
+def test_donates_changes_fingerprint():
+    n = 32
+    plain = KernelDef("inc", (make_inc(n),), writes=("x",), reads=("x",))
+    donating = KernelDef("inc", (make_inc(n),), writes=("x",),
+                         reads=("x",), donates=("x",))
+    assert plain.fingerprint() != donating.fingerprint()
+
+
+def test_shard_backend_rejects_wrapped_buffers_directly():
+    """A handle reaching shard_map directly would die in an opaque pytree
+    error; the backend names the fix instead."""
+    from repro.core import lower_shard
+    n = 32
+    glob = {"a": cuda_malloc((n,), jnp.float32),
+            "b": jnp.ones(n, jnp.float32), "c": jnp.zeros(n, jnp.float32)}
+    with pytest.raises(TypeError, match="launch through repro.core.api"):
+        lower_shard.run(make_vecadd(n), grid=1, block=n, glob=glob)
+
+
+def test_stream_launch_rebinds_donated_handle():
+    n = 64
+    k = KernelDef("inc", (make_inc(n),), writes=("x",), reads=("x",),
+                  donates=("x",))
+    h = cuda_memcpy_h2d(np.zeros(n, np.float32))
+    s = Stream({})
+    s.malloc("x", (n,), jnp.float32)
+    s.launch(k, grid=1, block=n, args={"x": h}, backend="loop")
+    np.testing.assert_array_equal(np.asarray(h), 1.0)
+    np.testing.assert_array_equal(s.memcpy_d2h("x"), 1.0)

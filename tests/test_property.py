@@ -1,4 +1,7 @@
 """Property-based tests (hypothesis) on system invariants."""
+import contextlib
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +11,16 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import launch, warp
 from repro.core import grain as grain_mod
-from repro.core.cuda_suite import make_histogram, make_vecadd
+from repro.core.cuda_suite import OOB, make_histogram, make_vecadd
+from repro.core.kernel import KernelDef
+from repro.core.memory import (
+    DeviceBuffer,
+    cuda_free,
+    cuda_malloc,
+    cuda_memcpy_async,
+    cuda_memcpy_d2h,
+    cuda_memcpy_h2d,
+)
 from repro.distributed import compression
 from repro.models.common import cross_entropy
 from repro.models.padding import gqa_pad_plan
@@ -166,6 +178,105 @@ def test_warp_reduce_matches_numpy(seed):
     out = np.asarray(warp.reduce(jnp.asarray(v), "add"))
     want = np.repeat(v.reshape(3, 32).sum(1), 32)
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+# --- device-memory runtime: copy round-trips + donation (ISSUE 5) ------------
+_DTYPES = {"f32": np.float32, "f64": np.float64, "i32": np.int32}
+
+
+def _host_values(seed, shape, tag, layout):
+    """A host array in the requested memory layout (incl. non-contiguous)."""
+    r = np.random.default_rng(seed)
+    if tag == "i32":
+        base = r.integers(-1000, 1000, size=shape).astype(np.int32)
+    else:
+        base = r.standard_normal(shape).astype(_DTYPES[tag])
+    if layout == "contiguous":
+        return base
+    if layout == "strided":                    # every-other-element view
+        wide = np.repeat(base, 2, axis=-1)
+        view = wide[..., ::2]
+        assert not view.flags["C_CONTIGUOUS"]
+        return view
+    view = base.T                              # transposed view
+    if view.ndim > 1:
+        assert not view.flags["C_CONTIGUOUS"]
+    return view
+
+
+@SET
+@given(seed=st.integers(0, 1000),
+       shape=st.sampled_from([(7,), (16,), (3, 5), (4, 4), (2, 3, 4)]),
+       tag=st.sampled_from(["f32", "f64", "i32"]),
+       layout=st.sampled_from(["contiguous", "strided", "transposed"]))
+def test_h2d_d2h_roundtrip_bit_identical(seed, shape, tag, layout):
+    """h2d -> d2h returns the exact bits for every dtype and layout,
+    including non-contiguous host views (f64 under scoped x64, as the
+    conformance matrix runs it)."""
+    host = _host_values(seed, shape, tag, layout)
+    ctx = (jax.experimental.enable_x64() if tag == "f64"
+           else contextlib.nullcontext())
+    with ctx:
+        buf = cuda_memcpy_h2d(host)
+        back = cuda_memcpy_d2h(buf)
+    assert back.dtype == host.dtype
+    assert np.ascontiguousarray(host).tobytes() == back.tobytes()
+    cuda_free(buf)
+
+
+@SET
+@given(seed=st.integers(0, 1000),
+       shape=st.sampled_from([(8,), (3, 5), (2, 3, 4)]),
+       tag=st.sampled_from(["f32", "f64", "i32"]),
+       layout=st.sampled_from(["contiguous", "strided"]))
+def test_d2d_roundtrip_bit_identical(seed, shape, tag, layout):
+    """h2d -> d2d -> d2h preserves bits; the source stays intact."""
+    host = _host_values(seed, shape, tag, layout)
+    ctx = (jax.experimental.enable_x64() if tag == "f64"
+           else contextlib.nullcontext())
+    with ctx:
+        src = cuda_memcpy_h2d(host)
+        dst = cuda_malloc(src.shape, src.dtype)
+        assert cuda_memcpy_async(dst, src) is dst
+        want = np.ascontiguousarray(host).tobytes()
+        assert cuda_memcpy_d2h(dst).tobytes() == want
+        assert cuda_memcpy_d2h(src).tobytes() == want
+
+
+def _rw_kernel(n, declared: bool):
+    """x = x * 3 + 1: reads and writes the same buffer."""
+    def stage(ctx, st):
+        gid = ctx.bid * ctx.block_dim + ctx.tid
+        val = st.glob["x"][jnp.minimum(gid, n - 1)] * 3 + 1
+        idx = jnp.where(gid < n, gid, OOB)
+        return st.set_glob(x=st.glob["x"].at[idx].set(val, mode="drop"))
+
+    return KernelDef("rw_affine", (stage,), writes=("x",), reads=("x",),
+                     donates=("x",) if declared else ())
+
+
+@SET
+@given(seed=st.integers(0, 500), n=st.sampled_from([32, 64, 96]),
+       declared=st.booleans(), backend=st.sampled_from(["loop", "vector"]))
+def test_donation_never_aliases_read_buffer_unless_declared(
+        seed, n, declared, backend):
+    """The donation property: a kernel that reads its written buffer may
+    alias (consume) the handle's input storage ONLY when donates declares
+    it; otherwise the input survives the launch bit-for-bit."""
+    host = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    k = _rw_kernel(n, declared)
+    h = cuda_memcpy_h2d(host)
+    out = launch(k, grid=1, block=n, args={"x": h}, backend=backend)
+    want = host * 3 + 1
+    if declared:
+        # aliased: same handle, now holding the output
+        assert out["x"] is h and h.live
+        np.testing.assert_allclose(np.asarray(h), want, rtol=1e-6)
+    else:
+        # no alias: plain-array result, input handle untouched
+        assert not isinstance(out["x"], DeviceBuffer)
+        np.testing.assert_allclose(np.asarray(out["x"]), want, rtol=1e-6)
+        assert cuda_memcpy_d2h(h).tobytes() == host.tobytes()
 
 
 # --- scheduler (Fig. 6 semantics) --------------------------------------------
