@@ -27,8 +27,8 @@ def main(scale: int = 4):
             # workload's end-to-end wall time (launch overheads included).
             # with_reference=False keeps the pure-Python oracle out of the
             # timed region
-            fn = lambda: run_entry(e, backend, args=args,
-                                   with_reference=False)
+            fn = lambda e=e, backend=backend: run_entry(
+                e, backend, args=args, with_reference=False)
             ts[backend] = time_call(fn, warmup=1, iters=3) * 1e6
         sp = ts["loop"] / ts["vector"]
         geo.append(sp)

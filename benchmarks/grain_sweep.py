@@ -29,7 +29,7 @@ def bench_kernel(name, kernel, grid, block, args):
     times = {}
     cfg = kernel[grid, block]
     for g in GRAINS:
-        fn = lambda: cfg.on(grain=g)(args)
+        fn = lambda g=g: cfg.on(grain=g)(args)
         tr = grain_mod.schedule_trace(grid, POOL, g)
         t = time_call(fn, warmup=1, iters=5) * 1e6
         times[g] = t

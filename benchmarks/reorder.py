@@ -26,7 +26,8 @@ def main():
                                nbins, tt, layout=layout)
             args = {"x": x if backend == "vector" else x[: n // 16],
                     "hist": jnp.zeros(nbins, jnp.int32)}
-            fn = lambda: k[grid, block].on(backend=backend)(args)
+            fn = lambda k=k, backend=backend, args=args: \
+                k[grid, block].on(backend=backend)(args)
             t = time_call(fn, warmup=1, iters=3) * 1e6
             times[(backend, layout)] = t
             print(f"hist_{backend}_{layout},{t:.0f},us "

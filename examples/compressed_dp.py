@@ -14,14 +14,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
-import jax                          # noqa: E402
-import jax.numpy as jnp             # noqa: E402
-import numpy as np                  # noqa: E402
-from jax.experimental.shard_map import shard_map  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed.compression import compressed_psum, dcn_bytes  # noqa: E402
-from repro.distributed.sharding import make_mesh  # noqa: E402
+from repro.distributed.compression import compressed_psum, dcn_bytes
+from repro.distributed.sharding import make_mesh
 
 mesh = make_mesh((4,), ("pod",))
 
@@ -76,6 +76,6 @@ assert final < 0.1, final   # int8 noise floor at fixed lr
 # XLA-CPU with a forced device count occasionally crashes in a TSL thread
 # during interpreter teardown (after all work is done); exit cleanly once
 # the result is printed and asserted.
-import sys  # noqa: E402
+import sys
 sys.stdout.flush()
 os._exit(0)

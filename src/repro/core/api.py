@@ -286,9 +286,24 @@ def _donate_leaf_indices(resolved_args: dict, donated: set) -> tuple:
     return tuple(idx)
 
 
+def _sanitize_enabled(sanitize) -> bool:
+    """Explicit ``sanitize=`` wins; otherwise the CUPBOP_SANITIZE env var."""
+    if sanitize is not None:
+        return bool(sanitize)
+    return os.environ.get("CUPBOP_SANITIZE", "0") not in ("", "0")
+
+
 def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
             backend: str, grain, dyn_shared, interpret: bool,
-            pool, devices=None, shard_axis: str = "blocks") -> dict:
+            pool, devices=None, shard_axis: str = "blocks",
+            sanitize: bool | None = None) -> dict:
+    if _sanitize_enabled(sanitize):
+        # kernelcheck gate: races / declaration drift / donation hazards
+        # fail the launch before any compiled entry runs.  Clean verdicts
+        # are memoized on the kernel, so chains re-check for free.
+        from repro.core import analyze as analyze_mod
+        analyze_mod.sanitize_launch(kernel, grid=grid, block=block,
+                                    args=args, dyn_shared=dyn_shared)
     entry, leaves = _entry_for(kernel, grid, block, args, backend, grain,
                                dyn_shared, interpret, pool, devices,
                                shard_axis)
@@ -348,6 +363,7 @@ class LaunchConfig:
     pool: int | None = None
     devices: int | None = None
     shard_axis: str = "blocks"
+    sanitize: bool | None = None
 
     @classmethod
     def from_chevron(cls, kernel: KernelDef, config: tuple) -> "LaunchConfig":
@@ -366,7 +382,7 @@ class LaunchConfig:
         devices (shard count for multi-device backends; None = all
         available), shard_axis (mesh axis name)."""
         allowed = {"backend", "grain", "interpret", "pool", "devices",
-                   "shard_axis"}
+                   "shard_axis", "sanitize"}
         bad = set(overrides) - allowed
         if bad:
             raise TypeError(f"LaunchConfig.on() got unexpected options "
@@ -387,14 +403,15 @@ class LaunchConfig:
         return _launch(self.kernel, self.grid, self.block, merged,
                        self.backend, self.grain, self.dyn_shared,
                        self.interpret, self.pool, self.devices,
-                       self.shard_axis)
+                       self.shard_axis, self.sanitize)
 
 
 def launch(kernel: KernelDef, *, grid, block, args: dict,
            backend: str = "vector", grain: int | str = 1,
            dyn_shared: int | None = None, interpret: bool = True,
            pool: int | None = None, devices: int | None = None,
-           shard_axis: str = "blocks") -> dict:
+           shard_axis: str = "blocks",
+           sanitize: bool | None = None) -> dict:
     """Launch ``kernel`` over ``grid`` blocks of ``block`` threads.
 
     Legacy keyword shim over the :class:`LaunchConfig` path; ``grid`` and
@@ -403,10 +420,13 @@ def launch(kernel: KernelDef, *, grid, block, args: dict,
     written buffers replaced.  ``grain`` may be an int, "average", or
     "aggressive" (paper SIV-A heuristics; ``pool`` = worker count).
     ``devices``/``shard_axis`` reach multi-device backends (``shard``)
-    only; single-device backends ignore them.
+    only; single-device backends ignore them.  ``sanitize=True`` (or
+    ``CUPBOP_SANITIZE=1``) runs :mod:`repro.core.analyze` kernelcheck on
+    the launch first and raises ``SanitizerError`` on findings.
     """
     return _launch(kernel, Dim3.of(grid), Dim3.of(block), args, backend,
-                   grain, dyn_shared, interpret, pool, devices, shard_axis)
+                   grain, dyn_shared, interpret, pool, devices, shard_axis,
+                   sanitize)
 
 
 def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,

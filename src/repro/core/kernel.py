@@ -259,6 +259,21 @@ class KernelDef:
                 f"kernel {self.name}: donates {sorted(stray)} not in writes "
                 f"{tuple(self.writes)}; only written buffers can consume "
                 f"their input storage")
+        # combines declarations are validated at definition time so a typo
+        # fails where it was written, not launches later inside lower_shard
+        from repro.core import atomics  # lazy: atomics is import-light
+        unwritten = set(self.combines) - set(self.writes)
+        if unwritten:
+            raise ValueError(
+                f"kernel {self.name}: combines for {sorted(unwritten)} not "
+                f"in writes {tuple(self.writes)}; cross-shard merges apply "
+                f"to written buffers only")
+        bad = {n: m for n, m in self.combines.items()
+               if m not in atomics.CROSS_SHARD_COMBINES}
+        if bad:
+            raise ValueError(
+                f"kernel {self.name}: unknown combine mode(s) {bad}; "
+                f"supported: {atomics.CROSS_SHARD_COMBINES}")
 
     def __getitem__(self, config):
         """``kernel[grid, block(, dyn_shared(, stream))]`` -> LaunchConfig."""

@@ -41,8 +41,9 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
     n_steps = -(-n_blocks // grain)
 
     def body(*refs):
-        in_refs = dict(zip(read_only + written, refs[: len(names)]))
-        out_refs = dict(zip(written, refs[len(names):]))
+        in_refs = dict(zip(read_only + written, refs[: len(names)],
+                           strict=True))
+        out_refs = dict(zip(written, refs[len(names):], strict=True))
         step = pl.program_id(0)
 
         # first grid step: seed the output buffers from their inputs
@@ -91,6 +92,6 @@ def run(kernel: KernelDef, *, grid, block, glob, grain=1, dyn_shared=None,
     )
     outs = call(*[glob[n] for n in read_only + written])
     new_glob = dict(glob)
-    for n, o in zip(written, outs):
+    for n, o in zip(written, outs, strict=True):
         new_glob[n] = o
     return new_glob

@@ -59,7 +59,7 @@ def compressed_psum(grads, axis_name: str, error: Optional[Any] = None,
         [None] * len(flat_g)
     if len(flat_e) != len(flat_g):
         flat_e = [None] * len(flat_g)
-    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
     return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
             jax.tree.unflatten(tdef, [o[1] for o in outs]))
 

@@ -77,8 +77,8 @@ def resolve(mesh: Mesh, shape, logical: tuple[Optional[str], ...]) -> P:
     assert len(logical) == len(shape), (logical, shape)
     used: set[str] = set()
     out = []
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for dim, name in zip(shape, logical):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
+    for dim, name in zip(shape, logical, strict=True):
         if name is None or name == "none":
             out.append(None)
             continue

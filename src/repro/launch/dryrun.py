@@ -21,22 +21,22 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
     + os.environ.get("XLA_FLAGS", ""))
 
-import argparse          # noqa: E402
-import json              # noqa: E402
-import time              # noqa: E402
-import traceback         # noqa: E402
+import argparse
+import json
+import time
+import traceback
 
-import jax               # noqa: E402
+import jax
 
-from repro import compat                              # noqa: E402
-from repro.configs import registry                    # noqa: E402
-from repro.configs.registry import SHAPES             # noqa: E402
-from repro.distributed import sharding as shd         # noqa: E402
-from repro.launch import hlo_analysis, specs          # noqa: E402
-from repro.launch.mesh import make_production_mesh    # noqa: E402
-from repro.models import transformer as T             # noqa: E402
-from repro.optim import adamw                         # noqa: E402
-from repro.train import step as train_mod             # noqa: E402
+from repro import compat
+from repro.configs import registry
+from repro.configs.registry import SHAPES
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import step as train_mod
 
 # TPU v5e-class hardware constants (per assignment)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -96,7 +96,7 @@ def pick_microbatches(cfg, shape_name, mesh) -> int:
     sh = SHAPES[shape_name]
     if sh["kind"] != "train":
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     dp = sizes.get("data", 1) * sizes.get("pod", 1)
     b_chip = max(1, sh["global_batch"] // dp)
     carry = b_chip * sh["seq_len"] * cfg.d_model * 2 * cfg.num_layers
@@ -222,7 +222,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "bound_step_s": max(t_c, t_m, t_x),
             "mfu_bound": mf / PEAK_FLOPS / max(t_c, t_m, t_x),
         }
-    except Exception as e:  # noqa: BLE001 - a failed cell is a bug, record it
+    except Exception as e:  # broad on purpose: a failed cell is a bug, record it
         rec["status"] = "fail"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]

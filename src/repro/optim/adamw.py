@@ -96,7 +96,7 @@ def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
     flat_m = jax.tree.leaves(state.m)
     flat_v = jax.tree.leaves(state.v)
     out = [upd(p, g, m, v) for p, g, m, v in
-           zip(flat_p, flat_g, flat_m, flat_v)]
+           zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
     newp = jax.tree.unflatten(tdef, [o[0] for o in out])
     newm = jax.tree.unflatten(tdef, [o[1] for o in out])
     newv = jax.tree.unflatten(tdef, [o[2] for o in out])

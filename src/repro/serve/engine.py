@@ -85,7 +85,7 @@ class Engine:
                                             r.prompt[None, :])
                 self.stats["launches"] += 1
                 # splice the single-row prefill cache into slot i
-                def put(c, c1):
+                def put(c, c1, i=i):
                     if c.ndim == 0:
                         return c
                     # batch axis position differs per leaf; match by size

@@ -86,7 +86,8 @@ def test_microbatch_accumulation_matches_full_batch():
         params, opt, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
                                rtol=1e-5)
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-5)
 

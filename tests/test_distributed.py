@@ -49,7 +49,8 @@ def test_param_specs_cover_all_leaves():
         ps = shd.spec_for_path(FakeMesh(), shd._path_str(path), leaf.shape)
         # every spec axis must divide the dim
         sizes = {"data": 16, "model": 16}
-        for dim, ax in zip(leaf.shape, tuple(ps) + (None,) * 10):
+        for dim, ax in zip(leaf.shape, tuple(ps) + (None,) * 10,
+                           strict=False):  # spec padded past ndim on purpose
             if ax is None:
                 continue
             axes = (ax,) if isinstance(ax, str) else ax

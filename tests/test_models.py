@@ -188,6 +188,6 @@ def test_flash_vjp_matches_autodiff():
 
     g1 = jax.grad(ours, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(theirs, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)

@@ -154,19 +154,15 @@ def test_combine_concat_mode_and_fallback():
 
 
 def test_combine_unknown_mode_rejected():
-    k = make_blocksum(8, 64, combines={"y": "xor"})
-    with pytest.raises(UnsupportedKernel, match="combine mode"):
-        launch(k, grid=8, block=64,
-               args={"x": jnp.zeros(512, jnp.float32),
-                     "y": jnp.zeros(8, jnp.float32)}, backend="shard")
+    # validated at KernelDef definition time (kernel.__post_init__), not
+    # first shard launch - the typo fails where it was written
+    with pytest.raises(ValueError, match="combine mode"):
+        make_blocksum(8, 64, combines={"y": "xor"})
 
 
 def test_combine_on_unwritten_buffer_rejected():
-    k = make_blocksum(8, 64, combines={"x": "sum"})
-    with pytest.raises(UnsupportedKernel, match="non-written"):
-        launch(k, grid=8, block=64,
-               args={"x": jnp.zeros(512, jnp.float32),
-                     "y": jnp.zeros(8, jnp.float32)}, backend="shard")
+    with pytest.raises(ValueError, match="not in writes"):
+        make_blocksum(8, 64, combines={"x": "sum"})
 
 
 def test_combines_changes_fingerprint():
