@@ -1,0 +1,166 @@
+"""Docs gate: the documentation must stay executable and internally linked.
+
+Every fenced ``python`` block in README.md and ``docs/*.md`` is executed
+for real - in one shared namespace per file, in document order, with
+``src/`` on ``sys.path`` - so API drift breaks CI instead of silently
+rotting the examples (fenced ``bash`` blocks are syntax-checked with
+``bash -n``; fences with any other language tag are prose).  Relative
+markdown links must resolve to a file or directory inside the repo;
+``http(s)``/``mailto`` targets, pure ``#fragment`` anchors, and
+forge-relative paths that escape the repo root (the CI badge's
+``../../actions/...``) are skipped.
+
+``--inject`` appends a synthetic document carrying a raising python
+block and a dead link - CI uses it to prove the gate actually trips,
+mirroring ``check_perf.py --inject`` and ``check_coverage.py
+--disable``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: inline markdown links/images: [text](target) - target up to space/paren
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+#: inline code spans - stripped before link scanning, `k[g, b](a=a)` is code
+CODE_SPAN = re.compile(r"`[^`]*`")
+
+INJECT_DOC = """# synthetic failing document (docs-gate self-test)
+
+A [dead link](this-file-does-not-exist.md) and a raising block:
+
+```python
+raise RuntimeError("docs-gate self-test")
+```
+"""
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def fenced_blocks(text: str) -> list[tuple[str, str, int]]:
+    """(language, code, 1-based start line) for every fenced block."""
+    blocks, lang, buf, start = [], None, [], 0
+    for ln, line in enumerate(text.splitlines(), 1):
+        stripped = line.strip()
+        if stripped.startswith("```"):
+            if lang is None:
+                lang = stripped[3:].strip().split()[0] if (
+                    stripped[3:].strip()) else ""
+                buf, start = [], ln + 1
+            else:
+                blocks.append((lang, "\n".join(buf), start))
+                lang = None
+        elif lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def run_python(path: str, blocks: list[tuple[str, int]]) -> list[str]:
+    """Execute blocks in one shared namespace; returns failure strings."""
+    fails = []
+    ns: dict = {"__name__": f"docs_{os.path.basename(path)}"}
+    for code, ln in blocks:
+        try:
+            exec(compile(code, f"{path}:{ln}", "exec"), ns)
+        except Exception:
+            reason = traceback.format_exception_only(*sys.exc_info()[:2])
+            fails.append(f"{path}:{ln}: python block raised: "
+                         f"{reason[-1].strip()}")
+    return fails
+
+
+def check_bash(path: str, blocks: list[tuple[str, int]]) -> list[str]:
+    fails = []
+    for code, ln in blocks:
+        res = subprocess.run(["bash", "-n"], input=code, text=True,
+                             capture_output=True)
+        if res.returncode != 0:
+            fails.append(f"{path}:{ln}: bash block does not parse: "
+                         f"{res.stderr.strip().splitlines()[-1]}")
+    return fails
+
+
+def check_links(path: str, text: str) -> tuple[int, list[str]]:
+    fails, checked = [], 0
+    base = os.path.dirname(path)
+    for ln, line in enumerate(text.splitlines(), 1):
+        for target in LINK.findall(CODE_SPAN.sub("", line)):
+            if (target.startswith(("http://", "https://", "mailto:", "#"))
+                    or "://" in target):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.realpath(os.path.join(base, rel))
+            if not (resolved == os.path.realpath(ROOT)
+                    or resolved.startswith(os.path.realpath(ROOT) + os.sep)):
+                continue    # forge-relative (e.g. the CI badge): not ours
+            checked += 1
+            if not os.path.exists(resolved):
+                fails.append(f"{path}:{ln}: broken link {target!r}")
+    return checked, fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--inject", action="store_true",
+                    help="append a synthetic failing doc (gate self-test)")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    files = doc_files()
+    tmp = None
+    if args.inject:
+        tmp = tempfile.NamedTemporaryFile(
+            "w", suffix=".md", prefix="docs_inject_", dir=ROOT,
+            delete=False)
+        tmp.write(INJECT_DOC)
+        tmp.close()
+        files.append(tmp.name)
+
+    failures: list[str] = []
+    try:
+        for path in files:
+            with open(path) as fh:
+                text = fh.read()
+            blocks = fenced_blocks(text)
+            py = [(c, ln) for lang, c, ln in blocks if lang == "python"]
+            sh = [(c, ln) for lang, c, ln in blocks if lang == "bash"]
+            fails = run_python(path, py) + check_bash(path, sh)
+            n_links, link_fails = check_links(path, text)
+            fails += link_fails
+            failures += fails
+            rel = os.path.relpath(path, ROOT)
+            status = "FAIL" if fails else "ok"
+            print(f"{status:4s} {rel}: {len(py)} python, {len(sh)} bash, "
+                  f"{n_links} links")
+    finally:
+        if tmp is not None:
+            os.unlink(tmp.name)
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if failures:
+        print("docs gate: FAILED", file=sys.stderr)
+        return 1
+    print("docs gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,17 @@ METRICS = {
         ("membench.json", "device_speedup", 0.50, 0.9),
     "membench:graph_speedup":
         ("membench.json", "graph_speedup", 0.25, 1.5),
+    # barrier-fission optimizer (ISSUE 7): the roofline benchmark must
+    # keep fusing every proven smoke pair (exact plan arithmetic, tight
+    # band; the 5.0 floor is the five pairs PR 6 proved on the original
+    # suite), and the best fused kernel - pixel_pipeline, whose whole
+    # 3-stage body collapses to one thread loop - must hold a >=1.1x
+    # optimized-vs-unoptimized win (wall-clock on shared runners, so the
+    # band is generous; the floor is the ISSUE 7 acceptance bar)
+    "roofline:fusion.pairs_fused":
+        ("roofline.json", "fusion.pairs_fused", 1.0, 5.0),
+    "roofline:fusion.speedup_best":
+        ("roofline.json", "fusion.speedup_best", 0.65, 1.1),
 }
 
 

@@ -67,9 +67,10 @@ from repro.core.dim3 import Dim3
 from repro.core.kernel import BlockState, Ctx, KernelDef, check_priv_chunk
 
 __all__ = [
-    "Finding", "FusionVerdict", "KernelReport", "SanitizerError",
-    "TrackedArray", "analyze_entry", "analyze_kernel", "analyze_suite",
-    "main", "report_to_json", "sanitize_launch",
+    "FUSION_SCHEMA", "Finding", "FusionVerdict", "KernelReport",
+    "SanitizerError", "TrackedArray", "analyze_entry", "analyze_fusion",
+    "analyze_kernel", "analyze_suite", "fusion_entry", "fusion_suite",
+    "fusion_to_json", "main", "report_to_json", "sanitize_launch",
 ]
 
 ALL = -1  # sentinel thread id: "every thread in the block"
@@ -909,24 +910,68 @@ def _pair_dep(rec: _BufRec, a: _StageAcc, b: _StageAcc,
     return None
 
 
-def _fusion_verdicts(kernel: KernelDef, per_block, block_size: int):
-    verdicts = []
-    for i in range(len(kernel.stages) - 1):
-        reason = None
-        for bid, recs in per_block:
-            for rec in recs.values():
-                a, b = rec.stages[i], rec.stages[i + 1]
-                dep = _pair_dep(rec, a, b, block_size)
-                if dep:
-                    reason = f"block {bid}, {rec.space} {rec.name}: {dep}"
-                    break
-            if reason:
+_CLEAN_REASON = ("no cross-thread dependence through shared or "
+                 "global memory in any analyzed block")
+
+
+def _pair_verdict(kernel: KernelDef, per_block, block_size: int,
+                  i: int, j: int) -> FusionVerdict:
+    """Verdict for one (not necessarily adjacent) stage pair ``i < j``."""
+    reason = None
+    for bid, recs in per_block:
+        for rec in recs.values():
+            dep = _pair_dep(rec, rec.stages[i], rec.stages[j], block_size)
+            if dep:
+                reason = f"block {bid}, {rec.space} {rec.name}: {dep}"
                 break
-        verdicts.append(FusionVerdict(
-            kernel=kernel.name, pair=(i, i + 1), mergeable=reason is None,
-            reason=reason or "no cross-thread dependence through shared or "
-                             "global memory in any analyzed block"))
-    return verdicts
+        if reason:
+            break
+    return FusionVerdict(
+        kernel=kernel.name, pair=(i, j), mergeable=reason is None,
+        reason=reason or _CLEAN_REASON)
+
+
+def _fusion_verdicts(kernel: KernelDef, per_block, block_size: int):
+    return [_pair_verdict(kernel, per_block, block_size, i, i + 1)
+            for i in range(len(kernel.stages) - 1)]
+
+
+def _shared_facts(per_block) -> dict:
+    """Per-__shared__-buffer facts for the optimizer's scalarization and
+    carried-state elision: which stages touch the buffer, and whether every
+    element is only ever touched by a single thread (``private``) - privacy
+    is a within-block property, so different blocks may own a cell through
+    different threads without breaking it."""
+    state: dict[str, dict] = {}
+    for _bid, recs in per_block:
+        for rec in recs.values():
+            if rec.space != "shared":
+                continue
+            fs = state.setdefault(rec.name, {"stages": set(),
+                                             "private": True})
+            owner: dict[int, int] = {}
+            for si, acc in enumerate(rec.stages):
+                if acc.read_ops or acc.write_ops or acc.accum_ops:
+                    fs["stages"].add(si)
+                if acc.read_all or acc.whole_write:
+                    fs["private"] = False
+                    continue
+                for table in (acc.reads, acc.writes, acc.accums):
+                    for loc, tids in table.items():
+                        if ALL in tids or len(tids) > 1:
+                            fs["private"] = False
+                            continue
+                        t = next(iter(tids))
+                        if owner.setdefault(loc, t) != t:
+                            fs["private"] = False
+    return {
+        name: {
+            "stages": sorted(fs["stages"]),
+            "last_stage": max(fs["stages"]) if fs["stages"] else None,
+            "private": bool(fs["stages"]) and fs["private"],
+        }
+        for name, fs in sorted(state.items())
+    }
 
 
 # --------------------------------------------------------------------------
@@ -1004,7 +1049,7 @@ def analyze_entry(entry, *, sample_blocks: int = 3,
 
 def analyze_suite(*, names: Sequence[str] | None = None, scale: int = 1,
                   sample_blocks: int = 3) -> list[KernelReport]:
-    """Run kernelcheck across the CUDA suite (all 17 kernels by default)."""
+    """Run kernelcheck across the CUDA suite (all 18 kernels by default)."""
     from repro.core import cuda_suite
     entries = cuda_suite.build_suite(scale=scale)
     if names:
@@ -1046,6 +1091,150 @@ def report_to_json(reports: Sequence[KernelReport]) -> dict:
             "n_stage_pairs": sum(len(r.fusion) for r in reports),
             "n_mergeable": len(mergeable),
             "mergeable_pairs": mergeable,
+        },
+    }
+
+
+# --------------------------------------------------------------------------
+# Fusion artifact: the stable verdict schema core/optimize.py (and external
+# tools via `python -m repro.core.analyze --fusion-only --json`) consume.
+# --------------------------------------------------------------------------
+FUSION_SCHEMA = "kernelcheck-fusion-1"
+
+
+def analyze_fusion(kernel: KernelDef, *, grid, block, args: dict,
+                   dyn_shared: int | None = None,
+                   sample_blocks: int = 3) -> dict:
+    """Fusion verdicts for one kernel at one geometry, as a stable artifact.
+
+    Schema ``kernelcheck-fusion-1``::
+
+        {"schema": "kernelcheck-fusion-1", "kernel": str,
+         "grid": [x, y, z], "block": [x, y, z],
+         "blocks_analyzed": [int, ...], "n_stages": int,
+         "verdicts": [{"kernel": str, "pair": [i, j],
+                       "mergeable": bool, "reason": str}, ...],
+         "shared": {name: {"stages": [int, ...], "last_stage": int | null,
+                           "private": bool}, ...}}
+
+    ``verdicts`` always covers every *adjacent* pair ``(i, i+1)``.  Within
+    each maximal run of mergeable adjacent pairs it additionally carries the
+    *skip* pairs ``(p, q), q > p+1``: adjacent proofs alone do not compose
+    (a dependence can flow over a stage that never touches the buffer), so
+    a multi-stage fused region is only legal when every intra-region pair
+    is proven.  ``shared`` feeds scalarization / carried-state elision:
+    which stages touch each __shared__ buffer, and whether every element is
+    single-thread-private within a block.
+    """
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    glob = {n: jnp.asarray(memory.unwrap(v, "fusion analysis"))
+            for n, v in args.items()}
+    bids = _sample_bids(grid.size, sample_blocks)
+    per_block = []
+    _CONCAT_EXTENTS[id(kernel)] = {
+        n: int(v.shape[0]) for n, v in glob.items() if v.ndim}
+    try:
+        for bid in bids:
+            recs, glob = _interpret_block(kernel, bid, block=block,
+                                          grid=grid, glob=glob,
+                                          dyn_shared=dyn_shared)
+            per_block.append((bid, recs))
+    finally:
+        _CONCAT_EXTENTS.pop(id(kernel), None)
+    n = len(kernel.stages)
+    verdicts = _fusion_verdicts(kernel, per_block, block.size)
+    adj = {v.pair: v.mergeable for v in verdicts}
+    i = 0
+    while i < n - 1:
+        if not adj[(i, i + 1)]:
+            i += 1
+            continue
+        j = i + 1
+        while j < n - 1 and adj[(j, j + 1)]:
+            j += 1
+        for p in range(i, j + 1):
+            for q in range(p + 2, j + 1):
+                verdicts.append(
+                    _pair_verdict(kernel, per_block, block.size, p, q))
+        i = j + 1
+    return {
+        "schema": FUSION_SCHEMA,
+        "kernel": kernel.name,
+        "grid": list(grid),
+        "block": list(block),
+        "blocks_analyzed": list(bids),
+        "n_stages": n,
+        "verdicts": [{"kernel": v.kernel, "pair": list(v.pair),
+                      "mergeable": v.mergeable, "reason": v.reason}
+                     for v in verdicts],
+        "shared": _shared_facts(per_block),
+    }
+
+
+def fusion_entry(entry, *, sample_blocks: int = 3, rng=None) -> list[dict]:
+    """Fusion artifacts for every distinct kernel a suite entry launches.
+
+    Mirrors :func:`analyze_entry`'s chain handling: steps run once in
+    order with real launch outputs carried forward, so later steps are
+    analyzed on realistic values.
+    """
+    rng = np.random.default_rng(0) if rng is None else rng
+    args = {n: memory.unwrap(v, "fusion analysis")
+            for n, v in entry.make_args(rng).items()}
+    if entry.chain is None:
+        return [analyze_fusion(entry.kernel, grid=entry.grid,
+                               block=entry.block, args=args,
+                               dyn_shared=entry.dyn_shared,
+                               sample_blocks=sample_blocks)]
+    artifacts, done = [], set()
+    for step in entry.chain.steps:
+        art = analyze_fusion(step.kernel, grid=step.grid, block=step.block,
+                             args=args, dyn_shared=step.dyn_shared,
+                             sample_blocks=sample_blocks)
+        if step.kernel.name not in done:
+            done.add(step.kernel.name)
+            artifacts.append(art)
+        out = {n: v for n, v in args.items()}
+        from repro.core.api import launch
+        out.update(launch(step.kernel, grid=step.grid, block=step.block,
+                          args=args, dyn_shared=step.dyn_shared))
+        args = out
+    return artifacts
+
+
+def fusion_suite(*, names: Sequence[str] | None = None, scale: int = 1,
+                 sample_blocks: int = 3) -> list[dict]:
+    """Fusion artifacts across the CUDA suite (all kernels by default)."""
+    from repro.core import cuda_suite
+    entries = cuda_suite.build_suite(scale=scale)
+    if names:
+        wanted = set(names)
+        entries = [e for e in entries if e.name in wanted]
+        missing = wanted - {e.name for e in entries}
+        if missing:
+            raise ValueError(f"unknown suite entries {sorted(missing)}; "
+                             f"known: {[e.name for e in entries]}")
+    artifacts = []
+    for entry in entries:
+        artifacts.extend(fusion_entry(entry, sample_blocks=sample_blocks))
+    return artifacts
+
+
+def fusion_to_json(artifacts: Sequence[dict]) -> dict:
+    """Wrap per-kernel fusion artifacts into the ``--fusion-only`` report."""
+    n_adj = sum(
+        1 for a in artifacts for v in a["verdicts"]
+        if v["pair"][1] - v["pair"][0] == 1)
+    n_adj_ok = sum(
+        1 for a in artifacts for v in a["verdicts"]
+        if v["pair"][1] - v["pair"][0] == 1 and v["mergeable"])
+    return {
+        "schema": FUSION_SCHEMA,
+        "kernels": list(artifacts),
+        "summary": {
+            "n_kernels": len(artifacts),
+            "n_adjacent_pairs": n_adj,
+            "n_adjacent_mergeable": n_adj_ok,
         },
     }
 
@@ -1163,6 +1352,11 @@ def main(argv: Sequence[str] | None = None) -> int:
     p.add_argument("--json", metavar="PATH",
                    help="write the JSON report (fusion verdicts feed the "
                         "barrier-fission scheduler)")
+    p.add_argument("--fusion-only", action="store_true",
+                   help="emit only the kernelcheck-fusion-1 verdict "
+                        "artifact (the schema core/optimize.py consumes); "
+                        "never gates - exit 0 unless analysis itself "
+                        "crashes")
     for name in _INJECTIONS:
         p.add_argument(f"--inject-{name}", action="store_true",
                        help=f"self-test: plant a {name} bug and require "
@@ -1171,6 +1365,23 @@ def main(argv: Sequence[str] | None = None) -> int:
 
     names = [n.strip() for n in opts.kernels.split(",")] \
         if opts.kernels else None
+
+    if opts.fusion_only:
+        artifacts = fusion_suite(names=names, scale=opts.scale,
+                                 sample_blocks=opts.sample_blocks)
+        for a in artifacts:
+            adj = [v for v in a["verdicts"]
+                   if v["pair"][1] - v["pair"][0] == 1]
+            ok = sum(v["mergeable"] for v in adj)
+            print(f"fusion {a['kernel']}: {ok}/{len(adj)} adjacent "
+                  f"pairs mergeable ({a['n_stages']} stages)")
+        if opts.json:
+            with open(opts.json, "w") as fh:
+                json.dump(fusion_to_json(artifacts), fh, indent=2,
+                          sort_keys=True)
+            print(f"kernelcheck: fusion artifact written to {opts.json}")
+        return 0
+
     reports = analyze_suite(names=names, scale=opts.scale,
                             sample_blocks=opts.sample_blocks)
 

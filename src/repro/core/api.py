@@ -293,17 +293,36 @@ def _sanitize_enabled(sanitize) -> bool:
     return os.environ.get("CUPBOP_SANITIZE", "0") not in ("", "0")
 
 
+def _optimize_enabled(optimize) -> bool:
+    """Explicit ``optimize=`` wins; otherwise the CUPBOP_OPTIMIZE env var."""
+    if optimize is not None:
+        return bool(optimize)
+    return os.environ.get("CUPBOP_OPTIMIZE", "0") not in ("", "0")
+
+
 def _launch(kernel: KernelDef, grid: Dim3, block: Dim3, args: dict,
             backend: str, grain, dyn_shared, interpret: bool,
             pool, devices=None, shard_axis: str = "blocks",
-            sanitize: bool | None = None) -> dict:
+            sanitize: bool | None = None,
+            optimize: bool | None = None) -> dict:
     if _sanitize_enabled(sanitize):
         # kernelcheck gate: races / declaration drift / donation hazards
         # fail the launch before any compiled entry runs.  Clean verdicts
         # are memoized on the kernel, so chains re-check for free.
+        # Runs on the BASE kernel (before any optimize rewrite) so finding
+        # stage indices match the author's source.
         from repro.core import analyze as analyze_mod
         analyze_mod.sanitize_launch(kernel, grid=grid, block=block,
                                     args=args, dyn_shared=dyn_shared)
+    if _optimize_enabled(optimize):
+        # barrier-fission optimizer: swap in the verdict-backed derived
+        # kernel (memoized per geometry+shapes).  The derived kernel has
+        # its own fingerprint domain, so both compile-cache tiers keep
+        # optimized and unoptimized specializations apart.
+        from repro.core import optimize as optimize_mod
+        kernel = optimize_mod.optimize_launch(kernel, grid=grid,
+                                              block=block, args=args,
+                                              dyn_shared=dyn_shared)
     entry, leaves = _entry_for(kernel, grid, block, args, backend, grain,
                                dyn_shared, interpret, pool, devices,
                                shard_axis)
@@ -318,16 +337,25 @@ def compiled(kernel: KernelDef, *, grid, block, args: dict,
              backend: str = "vector", grain: int | str = 1,
              dyn_shared: int | None = None, interpret: bool = True,
              pool: int | None = None, devices: int | None = None,
-             shard_axis: str = "blocks") -> CompiledKernel:
+             shard_axis: str = "blocks",
+             optimize: bool | None = None) -> CompiledKernel:
     """Compile (or fetch) the launch specialization without running it.
 
     The ``cudaModuleGetFunction`` analogue: pre-warm a specialization
     (e.g. at service startup, before traffic) or inspect its provenance -
     callers get the same :class:`CompiledKernel` a warm ``launch`` would
     dispatch through, with ``source`` telling whether it came from trace,
-    memory, or a disk artifact.
+    memory, or a disk artifact.  ``optimize=True`` pre-warms the
+    barrier-fission-optimized specialization instead (its own fingerprint,
+    so it never collides with the base kernel's cache entries).
     """
-    entry, _ = _entry_for(kernel, Dim3.of(grid), Dim3.of(block), args,
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    if _optimize_enabled(optimize):
+        from repro.core import optimize as optimize_mod
+        kernel = optimize_mod.optimize_launch(kernel, grid=grid,
+                                              block=block, args=args,
+                                              dyn_shared=dyn_shared)
+    entry, _ = _entry_for(kernel, grid, block, args,
                           backend, grain, dyn_shared, interpret, pool,
                           devices, shard_axis)
     return entry
@@ -364,6 +392,7 @@ class LaunchConfig:
     devices: int | None = None
     shard_axis: str = "blocks"
     sanitize: bool | None = None
+    optimize: bool | None = None
 
     @classmethod
     def from_chevron(cls, kernel: KernelDef, config: tuple) -> "LaunchConfig":
@@ -382,7 +411,7 @@ class LaunchConfig:
         devices (shard count for multi-device backends; None = all
         available), shard_axis (mesh axis name)."""
         allowed = {"backend", "grain", "interpret", "pool", "devices",
-                   "shard_axis", "sanitize"}
+                   "shard_axis", "sanitize", "optimize"}
         bad = set(overrides) - allowed
         if bad:
             raise TypeError(f"LaunchConfig.on() got unexpected options "
@@ -398,12 +427,13 @@ class LaunchConfig:
                 dyn_shared=self.dyn_shared,
                 args=merged or None,
                 interpret=self.interpret, pool=self.pool,
-                devices=self.devices, shard_axis=self.shard_axis)
+                devices=self.devices, shard_axis=self.shard_axis,
+                optimize=self.optimize)
             return self.stream
         return _launch(self.kernel, self.grid, self.block, merged,
                        self.backend, self.grain, self.dyn_shared,
                        self.interpret, self.pool, self.devices,
-                       self.shard_axis, self.sanitize)
+                       self.shard_axis, self.sanitize, self.optimize)
 
 
 def launch(kernel: KernelDef, *, grid, block, args: dict,
@@ -411,7 +441,8 @@ def launch(kernel: KernelDef, *, grid, block, args: dict,
            dyn_shared: int | None = None, interpret: bool = True,
            pool: int | None = None, devices: int | None = None,
            shard_axis: str = "blocks",
-           sanitize: bool | None = None) -> dict:
+           sanitize: bool | None = None,
+           optimize: bool | None = None) -> dict:
     """Launch ``kernel`` over ``grid`` blocks of ``block`` threads.
 
     Legacy keyword shim over the :class:`LaunchConfig` path; ``grid`` and
@@ -423,10 +454,13 @@ def launch(kernel: KernelDef, *, grid, block, args: dict,
     only; single-device backends ignore them.  ``sanitize=True`` (or
     ``CUPBOP_SANITIZE=1``) runs :mod:`repro.core.analyze` kernelcheck on
     the launch first and raises ``SanitizerError`` on findings.
+    ``optimize=True`` (or ``CUPBOP_OPTIMIZE=1``) applies the
+    :mod:`repro.core.optimize` barrier-fission pass first - bit-identical
+    results from a verdict-backed kernel with fewer stages.
     """
     return _launch(kernel, Dim3.of(grid), Dim3.of(block), args, backend,
                    grain, dyn_shared, interpret, pool, devices, shard_axis,
-                   sanitize)
+                   sanitize, optimize)
 
 
 def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,

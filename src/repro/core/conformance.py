@@ -75,6 +75,12 @@ DTYPE_BACKENDS = ("loop", "vector")
 #: that cell affordable, and the shard legs are covered by "device" mode)
 GRAPH_MODE_BACKENDS = ("loop", "vector")
 
+#: backends that sweep the barrier-fission optimizer mode: every kernel
+#: re-runs with ``optimize=True`` and owes FULL bit-identity to the same
+#: backend's unoptimized cell - fusion is pure stage composition, so any
+#: bit drift means the optimizer broke semantics (core/optimize.py)
+OPTIMIZED_BACKENDS = ("loop", "vector")
+
 
 @dataclasses.dataclass(frozen=True)
 class ConformanceCase:
@@ -100,10 +106,11 @@ class ConformanceCase:
 class Cell:
     """One matrix cell: a (kernel, backend, geometry, dtype, ...) run.
 
-    ``mode`` is the chain-replay axis: ``"host"`` (per-iteration host-hop
-    baseline, the only mode for single-launch kernels),
-    ``"device_resident"`` (on-device updates, k-batched stop polls), or
-    ``"graph"`` (graph-captured fused replay).
+    ``mode`` is the replay axis: ``"host"`` (per-iteration host-hop
+    baseline), ``"device_resident"`` (on-device updates, k-batched stop
+    polls), ``"graph"`` (graph-captured fused replay), or ``"optimized"``
+    (the host path with the barrier-fission pass on, owing full
+    bit-identity to the unoptimized host cell).
     """
 
     kernel: str
@@ -266,6 +273,17 @@ def _mk_transpose(tag: str) -> SuiteEntry:
         lambda a: {"y": a["x"].T.copy()})
 
 
+def _mk_pixel(tag: str) -> SuiteEntry:
+    n, b = 1024, 128
+    k = cuda_suite.make_pixel_pipeline(b, dtype=_dt(tag))
+    return SuiteEntry(
+        "pixel_pipeline", ("barrier",), k, n // b, b, None,
+        lambda r: {"img": r.uniform(0.5, 2.0, n).astype(_np_dt(tag)),
+                   "out": np.zeros(n, _np_dt(tag))},
+        lambda a: {"out": np.exp(np.log(a["img"]) * _np_dt(tag)(0.85)
+                                 + _np_dt(tag)(0.1))})
+
+
 def _make_from(base_name: str, builder=None, base_tag: str = "f32"):
     def make(tag: str) -> SuiteEntry:
         if tag == base_tag or builder is None:
@@ -304,6 +322,9 @@ def build_cases() -> list[ConformanceCase]:
         ConformanceCase("transpose_tiled",
                         _make_from("transpose_tiled", _mk_transpose),
                         dtypes=("f32", "f64", "i32")),
+        ConformanceCase("pixel_pipeline",
+                        _make_from("pixel_pipeline", _mk_pixel),
+                        dtypes=("f32", "f64")),
         ConformanceCase("bfs_frontier", _make_from("bfs_frontier",
                                                    base_tag="i32"),
                         dtypes=("i32",)),
@@ -373,9 +394,10 @@ def _bits(out, exclude: tuple[str, ...]) -> dict[str, bytes]:
             if k not in exclude}
 
 
-#: Cell.mode -> run_entry chain_mode
+#: Cell.mode -> run_entry chain_mode ("optimized" replays the host path
+#: with the barrier-fission pass enabled)
 _CHAIN_MODE = {"host": "host", "device_resident": "device",
-               "graph": "graph"}
+               "graph": "graph", "optimized": "host"}
 
 
 def run_cell(entry: SuiteEntry, case: ConformanceCase, backend: str,
@@ -396,7 +418,9 @@ def run_cell(entry: SuiteEntry, case: ConformanceCase, backend: str,
         with ctx:
             out, want = run_entry(entry, backend, grain=grain,
                                   devices=devices,
-                                  chain_mode=_CHAIN_MODE[mode], **geo_kw)
+                                  chain_mode=_CHAIN_MODE[mode],
+                                  optimize=True if mode == "optimized"
+                                  else None, **geo_kw)
         tol = _tol_for(entry, case, tag)
         cell.max_abs_err, bad = _oracle_check(out, want, tol)
         if bad:
@@ -456,6 +480,12 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                                "device_resident"))
                 points.append((base_tag, base.grid, base.block, 1,
                                "graph"))
+            # the barrier-fission leg: every kernel (plain and chain)
+            # re-runs with optimize=True and owes FULL bit-identity to
+            # the same backend's unoptimized cell - no exclusions at all,
+            # because stage fusion must not change a single bit
+            points.append((base_tag, base.grid, base.block, 1,
+                           "optimized"))
 
         anchors: dict[tuple, dict[str, bytes]] = {}
         host_bits: dict[tuple, dict[str, bytes]] = {}
@@ -488,6 +518,9 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                     if (mode == "graph"
                             and backend not in GRAPH_MODE_BACKENDS):
                         continue
+                    if (mode == "optimized"
+                            and backend not in OPTIMIZED_BACKENDS):
+                        continue
                 for d in devs:
                     if d is not None and d > avail:
                         from repro.core.dim3 import Dim3
@@ -510,7 +543,11 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                         # (iteration_state) is excluded, oracle outputs never
                         base_bits = host_bits.get((backend, d))
                         if out is not None and base_bits is not None:
-                            skip_bufs = (tuple(entry.nondeterministic_shard)
+                            # the optimized leg runs the same host-hop
+                            # cadence, so even iteration_state scratch
+                            # must match bit-for-bit
+                            skip_bufs = (() if mode == "optimized" else
+                                         tuple(entry.nondeterministic_shard)
                                          + tuple(entry.iteration_state))
                             got = {k: v for k, v in _bits(out, ()).items()
                                    if k not in skip_bufs}

@@ -16,6 +16,7 @@ the paper's Table II:
 | softmax_row         | attention primitive     | two barriers                 |
 | scan_block          | pathfinder/scan         | Hillis-Steele, 2x log2 stages|
 | transpose_tiled     | SVI-C reordering demo   | shared staging, coalescing   |
+| pixel_pipeline      | srad extract/compress   | defensive barriers, thread-private shared scratch (fusable) |
 | stencil2d           | hotspot                 | 2-D dim3 grid x block, halo  |
 | bfs_frontier        | bfs                     | atomicCAS flags, ballot-count, __constant__, launch chain |
 | pathfinder          | pathfinder              | row-wavefront DP across launches, halo barrier |
@@ -400,6 +401,39 @@ def make_transpose_tiled(h: int, w: int, tile: int = 8,
 
 
 # --------------------------------------------------------------------------
+# pixel_pipeline: defensive-barrier elementwise pipeline (srad's extract /
+# compress stages folded into one kernel).  Naive single-kernel ports keep a
+# __syncthreads between the stages even though every thread only ever
+# touches its *own* shared scratch cell - the missed-fusion class the
+# Polygeist GPU-to-CPU study measures as dominant in translated kernels.
+# kernelcheck proves every pair private, so core/optimize.py collapses the
+# whole kernel to a single stage (and scalarizes the scratch buffer).
+# --------------------------------------------------------------------------
+def make_pixel_pipeline(block: int, c0: float = 0.85, c1: float = 0.1,
+                        dtype=jnp.float32) -> KernelDef:
+    def extract(ctx, st):
+        v = st.glob["img"][_gid(ctx)]
+        return st.set_shared(
+            buf=st.shared["buf"].at[ctx.tid].set(jnp.log(v)))
+
+    def adjust(ctx, st):
+        b = st.shared["buf"]
+        return st.set_shared(buf=b.at[ctx.tid].set(b[ctx.tid] * c0 + c1))
+
+    def compress(ctx, st):
+        out = st.glob["out"].at[_gid(ctx)].set(
+            jnp.exp(st.shared["buf"][ctx.tid]))
+        return st.set_glob(out=out)
+
+    return KernelDef(
+        "pixel_pipeline", (extract, adjust, compress), writes=("out",),
+        reads=("img", "out"),
+        shared={"buf": ((block,), dtype)},
+        est_block_work=block * 20.0,
+    )
+
+
+# --------------------------------------------------------------------------
 # bfs_frontier (Rodinia bfs): level-synchronous BFS.  Each launch expands the
 # current frontier; threads claim unvisited neighbors with an atomicCAS on
 # the visited-flag array, winners publish dist/next-frontier, and the block
@@ -749,7 +783,8 @@ def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
               interpret: bool = True, grid=None, block=None,
               with_reference: bool = True, chain_mode: str = "host",
               chain_stats: ChainStats | None = None,
-              check_every: int | None = None):
+              check_every: int | None = None,
+              optimize: bool | None = None):
     """Execute a suite entry end-to-end under one backend.
 
     The single place that knows how to *drive* an entry: plain entries are
@@ -777,7 +812,7 @@ def run_entry(entry: SuiteEntry, backend: str = "loop", *, rng=None,
         arr = jnp.asarray(v)
         bufs[k] = memory.ConstArray(arr) if k in entry.const else arr
     kw = dict(backend=backend, grain=grain, devices=devices, pool=pool,
-              interpret=interpret)
+              interpret=interpret, optimize=optimize)
     if entry.chain is None:
         if chain_mode != "host":
             raise ValueError(
@@ -941,6 +976,17 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
                    "y": np.zeros((tw, th), np.float32)},
         lambda a: {"y": a["x"].T.copy()},
         rodinia="(SVI-C reordering)",
+    ))
+
+    pp_n = 4096 * scale
+    entries.append(SuiteEntry(
+        "pixel_pipeline", ("barrier",), make_pixel_pipeline(block),
+        pp_n // block, block, None,
+        lambda r: {"img": r.uniform(0.5, 2.0, pp_n).astype(np.float32),
+                   "out": np.zeros(pp_n, np.float32)},
+        lambda a: {"out": np.exp(np.log(a["img"]) * np.float32(0.85)
+                                 + np.float32(0.1))},
+        rodinia="srad extract/compress",
     ))
 
     entries.append(entry_bfs_frontier())

@@ -46,9 +46,17 @@ def run_block(kernel: KernelDef, bid, *, block, grid, glob, dyn_shared=None):
     shared = kernel.init_shared(dyn_shared)
     st = BlockState(priv={}, shared=shared, glob=glob)
     ctx = _make_ctx(bid, block, grid)
+    # barrier-fission optimizer: shared buffers proven dead after a stage
+    # leave the carried state (core/optimize.py drop_shared)
+    drop = dict(getattr(kernel, "drop_shared", ()) or ())
     for si, stage in enumerate(kernel.stages):
         st = stage(ctx, st)
         check_priv_chunk(st.priv, block.size, kernel.name, si)
+        dead = drop.get(si)
+        if dead:
+            st = st._replace(
+                shared={n: v for n, v in st.shared.items()
+                        if n not in dead})
     return st.glob
 
 

@@ -355,7 +355,8 @@ class Stream:
                dyn_shared: int | None = None,
                args: dict[str, Any] | None = None,
                interpret: bool = True, pool: int | None = None,
-               devices: int | None = None, shard_axis: str = "blocks"):
+               devices: int | None = None, shard_axis: str = "blocks",
+               optimize: bool | None = None):
         """Async launch over the stream's heap.
 
         The kernel always sees the full heap (device memory); a non-None
@@ -400,7 +401,8 @@ class Stream:
             self._capture.add_kernel(
                 self, kernel, grid=grid, block=block, backend=backend,
                 grain=grain, dyn_shared=dyn_shared, interpret=interpret,
-                pool=pool, devices=devices, shard_axis=shard_axis)
+                pool=pool, devices=devices, shard_axis=shard_axis,
+                optimize=optimize)
             return
         if args:
             missing = [n for n in args if n not in self.buffers]
@@ -418,7 +420,7 @@ class Stream:
         new = api.launch(kernel, grid=grid, block=block, args=buf_args,
                          backend=backend, grain=grain, dyn_shared=dyn_shared,
                          interpret=interpret, pool=pool, devices=devices,
-                         shard_axis=shard_axis)
+                         shard_axis=shard_axis, optimize=optimize)
         self.buffers.update({n: new[n] for n in kernel.writes})
         memory_mod.rebind_outputs(kernel, handles,
                                   {n: new[n] for n in kernel.writes

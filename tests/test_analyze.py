@@ -1,6 +1,6 @@
 """kernelcheck (repro.core.analyze): races, declaration audit, fusion.
 
-Two halves: (1) the whole 17-kernel suite must come back *clean* - the
+Two halves: (1) the whole 18-kernel suite must come back *clean* - the
 declarations the runtime trusts (reads/writes/combines/donates) are
 verified, not assumed - and (2) deliberately broken fixture kernels must
 trip each finding kind with the right kernel/stage/buffer named, because a
@@ -331,3 +331,43 @@ def test_cli_injected_race_trips_gate():
     assert res.returncode == 1, res.stdout + res.stderr
     assert "kernelcheck: FAILED" in res.stdout
     assert "shared-race" in res.stdout
+
+
+# --- the fusion artifact (kernelcheck-fusion-1): schema + CLI ----------------
+def test_fusion_artifact_schema():
+    """The documented stable schema core/optimize.py and tools consume."""
+    entry = next(e for e in SUITE if e.name == "pixel_pipeline")
+    (art,) = analyze.fusion_entry(entry)
+    assert art["schema"] == analyze.FUSION_SCHEMA == "kernelcheck-fusion-1"
+    assert art["kernel"] == "pixel_pipeline"
+    assert art["n_stages"] == 3
+    for v in art["verdicts"]:
+        assert set(v) == {"kernel", "pair", "mergeable", "reason"}
+        assert v["kernel"] == "pixel_pipeline"
+        i, j = v["pair"]
+        assert 0 <= i < j < art["n_stages"]
+        assert isinstance(v["mergeable"], bool)
+        assert isinstance(v["reason"], str) and v["reason"]
+    pairs = {tuple(v["pair"]) for v in art["verdicts"]}
+    # all adjacents, plus the skip pair of the maximal mergeable run
+    assert {(0, 1), (1, 2), (0, 2)} <= pairs
+    for name, facts in art["shared"].items():
+        assert name in entry.kernel.shared
+        assert set(facts) == {"stages", "last_stage", "private"}
+    json.dumps(art)  # serializable as-is
+
+
+def test_fusion_cli_json(tmp_path):
+    out = tmp_path / "fusion.json"
+    res = _run_cli("--fusion-only", "--kernels",
+                   "pixel_pipeline,reduce_shared", "--json", str(out))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "fusion pixel_pipeline: 2/2 adjacent pairs mergeable" in res.stdout
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "kernelcheck-fusion-1"
+    assert doc["summary"]["n_kernels"] == 2
+    by_kernel = {a["kernel"]: a for a in doc["kernels"]}
+    assert set(by_kernel) == {"pixel_pipeline", "reduce_shared"}
+    # reduce_shared's barrier tree must stay unfused in the artifact too
+    assert not any(v["mergeable"]
+                   for v in by_kernel["reduce_shared"]["verdicts"])

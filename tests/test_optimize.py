@@ -1,0 +1,201 @@
+"""Barrier-fission optimizer (repro.core.optimize): proofs in, rewrites out.
+
+Four contracts: (1) optimized runs are **bit-identical** to unoptimized
+ones for every suite kernel on both CPU lowerings - fusion composes stage
+functions unchanged, so any bit drift means an unproven dependence
+slipped through; (2) the pass keeps fusing at least the pairs PR 6's
+kernelcheck proved mergeable; (3) optimized and unoptimized
+specializations never share a cache entry (fingerprint domain
+separation); (4) the pass *refuses* hand-crafted plans that ask for
+fusions the verdicts do not prove - an optimizer that cannot say no to
+an unsound plan is a miscompiler waiting for a kernel.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analyze, api, cuda_suite, optimize
+from repro.core.cuda_suite import run_entry
+from repro.core.optimize import (
+    OptimizeError,
+    OptPlan,
+    OptimizedKernel,
+    apply_plan,
+    optimize_launch,
+    plan_from_artifact,
+)
+
+SUITE = cuda_suite.build_suite(scale=1)
+
+
+def _entry(name: str):
+    return next(e for e in SUITE if e.name == name)
+
+
+def _artifact(name: str) -> dict:
+    (art,) = analyze.fusion_entry(_entry(name))
+    return art
+
+
+# --- bit-identity: the whole suite, both CPU lowerings -----------------------
+@pytest.mark.parametrize("backend", ["loop", "vector"])
+@pytest.mark.parametrize("entry", SUITE, ids=lambda e: e.name)
+def test_optimized_bits_identical(entry, backend):
+    base, _ = run_entry(entry, backend, rng=np.random.default_rng(3),
+                        with_reference=False)
+    opt, _ = run_entry(entry, backend, rng=np.random.default_rng(3),
+                       with_reference=False, optimize=True)
+    for k in base:
+        assert (np.asarray(base[k]).tobytes()
+                == np.asarray(opt[k]).tobytes()), (
+            f"{entry.name}/{backend}: buffer {k!r} drifted under optimize")
+
+
+# --- fusion-count floor ------------------------------------------------------
+def test_suite_fusion_floor():
+    """>= the 5 pairs PR 6 proved, + pixel_pipeline's whole-kernel region."""
+    arts = analyze.fusion_suite(scale=1)
+    pairs = {a["kernel"]: plan_from_artifact(a).n_fused_pairs for a in arts}
+    assert sum(pairs.values()) >= 5
+    assert pairs["matmul_tiled"] == 2      # (0,1) and (8,9)
+    assert pairs["scan_block"] == 2        # (13,15) via the proven skip pair
+    assert pairs["lud_diag"] == 1
+    assert pairs["pixel_pipeline"] == 2    # 3 stages -> 1
+
+
+def test_plan_stage_counts_and_scalarization():
+    for name, before, after in (("matmul_tiled", 10, 8),
+                                ("scan_block", 16, 14),
+                                ("pixel_pipeline", 3, 1)):
+        entry = _entry(name)
+        art = _artifact(name)
+        derived = apply_plan(entry.kernel, plan_from_artifact(art), art)
+        assert len(entry.kernel.stages) == before
+        assert len(derived.stages) == after, name
+    # pixel_pipeline's scratch is single-writer and region-local: the one
+    # suite kernel whose shared cell fully scalarizes
+    art = _artifact("pixel_pipeline")
+    assert plan_from_artifact(art).scalarized == ("buf",)
+
+
+def test_identity_plan_returns_base_kernel():
+    entry = _entry("vecadd")        # one stage: nothing to fuse or drop
+    args = {k: jnp.asarray(v)
+            for k, v in entry.make_args(np.random.default_rng(0)).items()}
+    derived = optimize_launch(entry.kernel, grid=entry.grid,
+                              block=entry.block, args=args)
+    assert derived is entry.kernel
+
+
+def test_optimize_launch_memoizes_derived_kernel():
+    entry = _entry("pixel_pipeline")
+    args = {k: jnp.asarray(v)
+            for k, v in entry.make_args(np.random.default_rng(0)).items()}
+    kw = dict(grid=entry.grid, block=entry.block, args=args)
+    first = optimize_launch(entry.kernel, **kw)
+    assert isinstance(first, OptimizedKernel)
+    assert optimize_launch(entry.kernel, **kw) is first
+    # an OptimizedKernel passes through untouched (no double-optimize)
+    assert optimize_launch(first, **kw) is first
+
+
+# --- cache-key separation ----------------------------------------------------
+def test_cache_key_separation():
+    entry = _entry("pixel_pipeline")
+    args = {k: jnp.asarray(v)
+            for k, v in entry.make_args(np.random.default_rng(0)).items()}
+    derived = optimize_launch(entry.kernel, grid=entry.grid,
+                              block=entry.block, args=args)
+    assert derived.fingerprint() != entry.kernel.fingerprint()
+
+    api.cache_clear()
+    kw = dict(grid=entry.grid, block=entry.block, args=args, backend="loop")
+    api.compiled(entry.kernel, **kw)
+    n_base = api.cache_size()
+    api.compiled(entry.kernel, optimize=True, **kw)
+    assert api.cache_size() == n_base + 1   # new specialization, no reuse
+    stats = api.cache_stats()
+    assert stats.misses >= 2
+    # both warm now: repeat lookups hit their own entries
+    api.compiled(entry.kernel, **kw)
+    api.compiled(entry.kernel, optimize=True, **kw)
+    assert api.cache_stats().hits >= stats.hits + 2
+
+
+# --- refusal: plans the verdicts do not prove --------------------------------
+def test_refuses_unproven_fusion_pair():
+    """reduce_shared's tree levels read other threads' slots: unfusable."""
+    entry = _entry("reduce_shared")
+    art = _artifact("reduce_shared")
+    assert not any(v["mergeable"] for v in art["verdicts"])
+    planted = OptPlan(kernel=entry.kernel.name,
+                      n_stages=len(entry.kernel.stages),
+                      regions=((0, 1),))
+    with pytest.raises(OptimizeError, match="unfusable"):
+        apply_plan(entry.kernel, planted, art)
+
+
+def test_refuses_region_without_skip_proof():
+    """A 3-stage region needs every intra-region pair, not just adjacents."""
+    entry = _entry("reduce_shared")
+    art = _artifact("reduce_shared")
+    planted = OptPlan(kernel=entry.kernel.name,
+                      n_stages=len(entry.kernel.stages),
+                      regions=((0, 2),))
+    with pytest.raises(OptimizeError):
+        apply_plan(entry.kernel, planted, art)
+
+
+def test_refuses_unproven_shared_drop():
+    entry = _entry("pixel_pipeline")
+    art = _artifact("pixel_pipeline")
+    planted = OptPlan(kernel=entry.kernel.name, n_stages=3,
+                      drop_shared=((0, ("buf",)),))   # live through stage 2
+    with pytest.raises(OptimizeError, match="live"):
+        apply_plan(entry.kernel, planted, art)
+
+
+def test_refuses_stage_count_mismatch():
+    entry = _entry("pixel_pipeline")
+    art = _artifact("pixel_pipeline")
+    planted = OptPlan(kernel=entry.kernel.name, n_stages=4,
+                      regions=((0, 1),))
+    with pytest.raises(OptimizeError, match="stage-count"):
+        apply_plan(entry.kernel, planted, art)
+
+
+# --- opt-in surfaces ---------------------------------------------------------
+def test_env_flag(monkeypatch):
+    monkeypatch.delenv("CUPBOP_OPTIMIZE", raising=False)
+    assert not optimize.optimize_env_enabled()
+    monkeypatch.setenv("CUPBOP_OPTIMIZE", "0")
+    assert not optimize.optimize_env_enabled()
+    monkeypatch.setenv("CUPBOP_OPTIMIZE", "1")
+    assert optimize.optimize_env_enabled()
+
+
+def test_env_flag_drives_launch(monkeypatch):
+    entry = _entry("pixel_pipeline")
+    base, _ = run_entry(entry, "loop", rng=np.random.default_rng(5),
+                        with_reference=False)
+    monkeypatch.setenv("CUPBOP_OPTIMIZE", "1")
+    kernel = cuda_suite.make_pixel_pipeline(128)   # fresh: no memo attr yet
+    args = entry.make_args(np.random.default_rng(5))
+    out = api.launch(kernel, grid=entry.grid, block=entry.block,
+                     args={k: jnp.asarray(v) for k, v in args.items()},
+                     backend="loop")
+    derived = getattr(kernel, "_optimize_derived", {})
+    assert any(isinstance(k, OptimizedKernel) for k in derived.values())
+    assert (np.asarray(out["out"]).tobytes()
+            == np.asarray(base["out"]).tobytes())
+
+
+def test_explicit_false_overrides_env(monkeypatch):
+    monkeypatch.setenv("CUPBOP_OPTIMIZE", "1")
+    kernel = cuda_suite.make_pixel_pipeline(128)
+    entry = _entry("pixel_pipeline")
+    args = entry.make_args(np.random.default_rng(5))
+    api.launch(kernel, grid=entry.grid, block=entry.block,
+               args={k: jnp.asarray(v) for k, v in args.items()},
+               backend="loop", optimize=False)
+    assert not getattr(kernel, "_optimize_derived", {})
