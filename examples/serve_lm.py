@@ -1,12 +1,14 @@
 """Serve a small model with batched requests through the stream-semantics
-engine (CuPBoP C3 at the serving layer).
+engine (CuPBoP C3 at the serving layer).  The kernel-launch serving tier
+is the default mode of ``python -m repro.launch.serve``; ``--lm`` selects
+this token-level path.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
 from repro.launch import serve
 
 if __name__ == "__main__":
-    stats = serve.main(["--arch", "qwen2-0.5b", "--requests", "8",
+    stats = serve.main(["--lm", "--arch", "qwen2-0.5b", "--requests", "8",
                         "--max-new", "12", "--slots", "4"])
     # hazard-only policy must sync at most once per emitted step + admissions
     assert stats["syncs"] <= stats["launches"] + 1, stats

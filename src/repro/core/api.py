@@ -47,8 +47,8 @@ from repro.core.kernel import CompiledKernel, KernelDef, UnsupportedKernel
 __all__ = [
     "BACKENDS", "CacheStats", "LaunchConfig", "cache_clear", "cache_resize",
     "cache_size", "cache_stats", "compiled", "coverage",
-    "disable_disk_cache", "enable_disk_cache", "launch", "register_backend",
-    "supported",
+    "disable_disk_cache", "enable_disk_cache", "launch", "launch_batch",
+    "register_backend", "supported",
 ]
 
 # The compiled-launch cache lives ON each kernel (a private dict attached to
@@ -461,6 +461,116 @@ def launch(kernel: KernelDef, *, grid, block, args: dict,
     return _launch(kernel, Dim3.of(grid), Dim3.of(block), args, backend,
                    grain, dyn_shared, interpret, pool, devices, shard_axis,
                    sanitize, optimize)
+
+
+def _build_batch(kernel: KernelDef, backend: str, grid: Dim3, block: Dim3,
+                 grain: int, dyn_shared, treedef, interpret: bool):
+    """Jitted entry running N stacked launches of one specialization.
+
+    The inner fn is the same per-launch builder :func:`_build` jits; here
+    it is ``vmap``-ed over a leading request axis instead, so N compatible
+    launches become ONE dispatch.  Stacking and row-indexing are pure data
+    movement and the lowerings are rank-polymorphic jnp programs, so each
+    row is bit-identical to the independent launch it replaces.
+    """
+    entry = get_backend(backend)
+
+    def one(*leaves):
+        glob = packing.unpack(leaves, treedef)
+        return entry.run(kernel, grid=grid, block=block, glob=glob,
+                         grain=grain, dyn_shared=dyn_shared,
+                         interpret=interpret)
+
+    return jax.jit(jax.vmap(one))
+
+
+def launch_batch(kernel: KernelDef, *, grid, block, args_list: list[dict],
+                 backend: str = "vector", grain: int | str = 1,
+                 dyn_shared: int | None = None, interpret: bool = True,
+                 pool: int | None = None,
+                 sanitize: bool | None = None,
+                 optimize: bool | None = None) -> list[dict]:
+    """Run N compatible launches of ``kernel`` as one stacked dispatch.
+
+    The serving tier's batcher: every dict in ``args_list`` must bind the
+    same buffer structure (treedef and leaf shapes/dtypes) - request
+    ``i``'s leaves become row ``i`` of a stacked leading axis, one
+    ``jit(vmap(...))`` entry runs all rows, and the outputs are unstacked
+    back into one result dict per request.  Batched entries live in the
+    same LRU/:class:`CacheStats` as plain launches (keyed with a
+    ``("batch", n)`` component), so a warm batch of a hot specialization
+    is a cache hit like any other.
+
+    Semantics vs :func:`launch`, per request: handle liveness and
+    const-space enforcement are identical (``resolve_launch_args`` runs on
+    each request) and donated handles re-bind to their row's output; the
+    only loss is XLA storage donation itself (rows are stacked into fresh
+    arrays, so there is no input storage to alias).  Multi-device backends
+    raise :class:`UnsupportedKernel` - stacked batching is single-device
+    (batch across requests XOR shard across devices; a service dispatches
+    sharded traffic request-at-a-time).
+    """
+    if not args_list:
+        raise ValueError("launch_batch: args_list must be non-empty")
+    grid, block = Dim3.of(grid), Dim3.of(block)
+    if _sanitize_enabled(sanitize):
+        from repro.core import analyze as analyze_mod
+        analyze_mod.sanitize_launch(kernel, grid=grid, block=block,
+                                    args=args_list[0], dyn_shared=dyn_shared)
+    if _optimize_enabled(optimize):
+        from repro.core import optimize as optimize_mod
+        kernel = optimize_mod.optimize_launch(kernel, grid=grid, block=block,
+                                              args=args_list[0],
+                                              dyn_shared=dyn_shared)
+    if len(args_list) == 1:
+        # a batch of one is a plain launch (donation and disk tier apply);
+        # passes run above, so suppress the env-var defaults here
+        return [_launch(kernel, grid, block, args_list[0], backend, grain,
+                        dyn_shared, interpret, pool,
+                        sanitize=False, optimize=False)]
+    if get_backend(backend).supports("multi_device"):
+        raise UnsupportedKernel(
+            f"launch_batch: backend {backend!r} shards blocks across "
+            f"devices; stacked request batching is single-device only - "
+            f"dispatch these requests independently")
+    grain = _resolve_grain(kernel, grain, pool, grid.size)
+    packed, treedef0, shapes0 = [], None, None
+    for i, a in enumerate(args_list):
+        leaves, treedef = packing.pack(
+            memory_mod.resolve_launch_args(kernel, a))
+        shapes = tuple((l.shape, jnp.asarray(l).dtype.name) for l in leaves)
+        if i == 0:
+            treedef0, shapes0 = treedef, shapes
+        elif (treedef, shapes) != (treedef0, shapes0):
+            raise ValueError(
+                f"launch_batch: request {i} does not match the batch "
+                f"specialization (buffer structure or leaf shapes/dtypes "
+                f"differ from request 0); only compatible launches stack")
+        packed.append(leaves)
+    n = len(packed)
+    stacked = tuple(jnp.stack([p[j] for p in packed])
+                    for j in range(len(packed[0])))
+    key = ("batch", n, backend, grid, block, grain, dyn_shared, interpret,
+           treedef0, shapes0)
+    per_kernel = _kernel_cache(kernel)
+    entry = per_kernel.get(key)
+    if entry is not None:
+        _STATS.hits += 1
+        _lru_touch(kernel, key)
+    else:
+        _STATS.misses += 1
+        fn = _build_batch(kernel, backend, grid, block, grain, dyn_shared,
+                          treedef0, interpret)
+        # surface UnsupportedKernel eagerly, as the single-launch path does
+        jax.eval_shape(fn, *stacked)
+        entry = CompiledKernel(kernel=kernel, backend=backend, grid=grid,
+                               block=block, key=key, fn=fn, source="trace")
+        per_kernel[key] = entry
+        _lru_insert(kernel, key)
+    out = entry(*stacked)
+    return [memory_mod.rebind_outputs(
+                kernel, a, {name: v[i] for name, v in out.items()})
+            for i, a in enumerate(args_list)]
 
 
 def supported(kernel: KernelDef, backend: str, *, grid=4, block=64,

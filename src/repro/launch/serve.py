@@ -1,33 +1,78 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: kernel-service traffic (default) or the LM engine (--lm).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+The default mode stands up a :class:`repro.serve.KernelService`, registers
+the single-launch suite kernels as endpoints, replays a round-robin
+request mix through the batching worker, and prints the
+:class:`~repro.serve.ServiceStats` surface::
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+
+``--lm`` drives the token-level tier instead (continuous-batching decode
+over the transformer stack, :mod:`repro.serve.engine`)::
+
+  PYTHONPATH=src python -m repro.launch.serve --lm --arch qwen2-0.5b \\
       --requests 8 --max-new 12
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import registry
-from repro.core.streams import Policy
-from repro.models import transformer as T
-from repro.serve.engine import Engine
+
+def serve_kernels(args) -> dict:
+    """Smoke a kernel-service under round-robin suite traffic."""
+    from repro.core.cuda_suite import build_suite
+    from repro.serve import KernelService
+
+    entries = [e for e in build_suite(scale=1) if e.chain is None]
+    if args.kernels:
+        keep = set(args.kernels)
+        entries = [e for e in entries if e.name in keep]
+        if not entries:
+            raise SystemExit(f"no suite kernels match {sorted(keep)}")
+    rng = np.random.default_rng(0)
+    with KernelService(backend=args.backend, max_batch=args.max_batch,
+                       admission_window_ms=args.window_ms,
+                       default_timeout_s=args.timeout) as svc:
+        for e in entries:
+            svc.register_entry(e)
+        t0 = time.perf_counter()
+        # two waves: the first traces each specialization, the second is
+        # the warm traffic the service exists for - so the demo's stats
+        # show cache hits, not just one cold dispatch per endpoint
+        for _wave in range(2):
+            tickets = [svc.submit(entries[i % len(entries)].name,
+                                  entries[i % len(entries)].make_args(rng))
+                       for i in range(args.requests)]
+            for t in tickets:
+                t.result(timeout=args.timeout)
+        dt = time.perf_counter() - t0
+        stats = svc.stats()
+    doc = stats.to_json()
+    n = 2 * args.requests
+    print(f"served {n} requests over {len(entries)} endpoints "
+          f"in {dt:.2f}s ({n / dt:.1f} req/s) "
+          f"warm_hit_rate={stats.warm_hit_rate} "
+          f"dispatches={stats.dispatches} "
+          f"occupancy={doc['batch_occupancy']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"stats written to {args.json}")
+    return doc
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--sync-always", action="store_true",
-                    help="HIP-CPU baseline policy (paper SVII-A.2)")
-    args = ap.parse_args(argv)
+def serve_lm(args) -> dict:
+    """Batched LM requests through the continuous-batching engine."""
+    import jax
+
+    from repro.configs import registry
+    from repro.core.streams import Policy
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
 
     cfg = registry.smoke(args.arch) if args.smoke else registry.get(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -49,6 +94,36 @@ def main(argv=None):
     for r in reqs[:3]:
         print(f"  req{r.rid}: {r.out}")
     return eng.stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--lm", action="store_true",
+                    help="drive the token-level LM engine instead of the "
+                         "kernel service")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request count (default: 48 kernel / 8 lm)")
+    # kernel-service mode
+    ap.add_argument("--backend", default="loop")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=2.0)
+    ap.add_argument("--timeout", type=float, default=120.0)
+    ap.add_argument("--kernels", nargs="*", default=None,
+                    help="restrict to these suite kernels")
+    ap.add_argument("--json", default=None,
+                    help="write the ServiceStats snapshot here")
+    # lm mode
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--sync-always", action="store_true",
+                    help="HIP-CPU baseline policy (paper SVII-A.2)")
+    args = ap.parse_args(argv)
+    if args.requests is None:
+        args.requests = 8 if args.lm else 48
+    return serve_lm(args) if args.lm else serve_kernels(args)
 
 
 if __name__ == "__main__":

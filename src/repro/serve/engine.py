@@ -1,20 +1,28 @@
-"""Serving engine: continuous batching + CuPBoP stream semantics (C3).
+"""Token-level LM serving engine: continuous batching + stream semantics.
 
-The paper's host-runtime contribution - asynchronous kernel launches with
-implicit barriers only on true hazards (SIII-C.1) - maps onto serving as:
+This is the *token-granularity* tier of the serving stack - the
+kernel-launch tier (multi-tenant suite kernels, stacked-batch dispatch)
+lives in :mod:`repro.serve.kernel_service` and is documented in
+``docs/serving.md``.  Both apply the paper's host-runtime contribution -
+asynchronous launches with implicit barriers only on true hazards
+(SIII-C.1) - at their own request granularity.  Here:
 
 * decode steps are *launched* without host sync; sampling (argmax) runs on
   device, so the token fed to step t+1 is a device array the host never
   reads;
 * the host blocks only when a finished request's tokens must be *emitted*
-  (the RAW hazard: host read of a device write);
-* ``SyncPolicy.SYNC_ALWAYS`` reproduces HIP-CPU's sync-before-every-copy
+  (the RAW hazard: host read of a device write) - the same emit rule the
+  kernel service applies before completing a ticket;
+* ``Policy.SYNC_ALWAYS`` reproduces HIP-CPU's sync-before-every-copy
   behavior for the Fig.11-style benchmark (benchmarks/launch_overhead.py
   measures both).
 
 Batching: fixed-slot continuous batcher - finished slots are refilled from
 the queue, prefill runs per-admission, decode advances all active slots in
-one jitted step.
+one jitted step.  (The kernel service batches *across tenants* by
+specialization instead; same cache-amortization idea, different axis.)
+
+Drive it with ``python -m repro.launch.serve --lm``.
 """
 from __future__ import annotations
 
