@@ -101,20 +101,24 @@ def _serial_rmw(arr, idx, update):
 
     ``update(t, cur)`` returns the value to store at ``idx[t]`` given the
     currently-observed ``cur`` (return ``cur`` to store nothing).  Indices
-    at or past ``arr.shape[0]`` mark inactive threads: they observe a
-    clamped gather but always store the observed value back (a no-op).
-    Returns ``(new_arr, old)`` where ``old[t]`` is the value thread ``t``
-    observed - exactly CUDA's return-the-previous-value contract, under
-    the deterministic thread-order serialization.
+    outside ``[0, arr.shape[0])`` - negative or at/past the end - mark
+    inactive threads: they observe a clamped gather but always store the
+    observed value back (a no-op), matching the ``mode="drop"`` contract
+    of :func:`atomic_add`/``max``/``min``.  Returns ``(new_arr, old)``
+    where ``old[t]`` is the value thread ``t`` observed - exactly CUDA's
+    return-the-previous-value contract, under the deterministic
+    thread-order serialization.
     """
     idx = jnp.asarray(idx)
     size = arr.shape[0]
 
     def body(t, carry):
         a, old = carry
-        cur = a[jnp.minimum(idx[t], size - 1)]
-        new = jnp.where(idx[t] < size, update(t, cur), cur)
-        a = a.at[jnp.minimum(idx[t], size - 1)].set(new)
+        active = (idx[t] >= 0) & (idx[t] < size)
+        safe = jnp.clip(idx[t], 0, size - 1)
+        cur = a[safe]
+        new = jnp.where(active, update(t, cur), cur)
+        a = a.at[safe].set(new)
         return a, old.at[t].set(cur)
 
     old0 = jnp.zeros(idx.shape, arr.dtype)

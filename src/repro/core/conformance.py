@@ -81,6 +81,18 @@ GRAPH_MODE_BACKENDS = ("loop", "vector")
 #: bit drift means the optimizer broke semantics (core/optimize.py)
 OPTIMIZED_BACKENDS = ("loop", "vector")
 
+#: backends that sweep the CUDA-C frontend mode: kernels with a ``.cu``
+#: corpus source (repro/frontend/corpus) re-run as their *translated*
+#: twin and owe FULL bit-identity to the same backend's hand-written
+#: host cell - the executable form of "ingests CUDA source without
+#: changing semantics" (repro.frontend)
+FRONTEND_BACKENDS = ("loop", "vector")
+
+
+def _frontend_corpus() -> tuple[str, ...]:
+    from repro.frontend.suite import CORPUS
+    return CORPUS
+
 
 @dataclasses.dataclass(frozen=True)
 class ConformanceCase:
@@ -108,9 +120,11 @@ class Cell:
 
     ``mode`` is the replay axis: ``"host"`` (per-iteration host-hop
     baseline), ``"device_resident"`` (on-device updates, k-batched stop
-    polls), ``"graph"`` (graph-captured fused replay), or ``"optimized"``
+    polls), ``"graph"`` (graph-captured fused replay), ``"optimized"``
     (the host path with the barrier-fission pass on, owing full
-    bit-identity to the unoptimized host cell).
+    bit-identity to the unoptimized host cell), or ``"frontend"`` (the
+    kernel's ``.cu`` corpus source translated by :mod:`repro.frontend`,
+    owing full bit-identity to the hand-written host cell).
     """
 
     kernel: str
@@ -486,6 +500,11 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
             # because stage fusion must not change a single bit
             points.append((base_tag, base.grid, base.block, 1,
                            "optimized"))
+            if case.name in _frontend_corpus():
+                # the frontend leg: the kernel's .cu source, translated,
+                # owes FULL bit-identity to the hand-written host cell
+                points.append((base_tag, base.grid, base.block, 1,
+                               "frontend"))
 
         anchors: dict[tuple, dict[str, bytes]] = {}
         host_bits: dict[tuple, dict[str, bytes]] = {}
@@ -521,6 +540,9 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                     if (mode == "optimized"
                             and backend not in OPTIMIZED_BACKENDS):
                         continue
+                    if (mode == "frontend"
+                            and backend not in FRONTEND_BACKENDS):
+                        continue
                 for d in devs:
                     if d is not None and d > avail:
                         from repro.core.dim3 import Dim3
@@ -531,6 +553,43 @@ def run_matrix(cases: list[ConformanceCase] | None = None,
                             grain=grain, devices=d, status="skip",
                             mode=mode,
                             detail=f"only {avail} device(s) available"))
+                        continue
+                    if mode == "frontend":
+                        # not a replay of the hand-written kernel but a
+                        # *different* KernelDef (translated from the .cu
+                        # corpus source) run through the normal host
+                        # path, compared bit-for-bit against the
+                        # hand-written host cell
+                        from repro.core.dim3 import Dim3
+                        from repro.frontend.suite import frontend_twin
+                        cell = Cell(
+                            kernel=case.name, backend=backend,
+                            grid=tuple(Dim3.of(grid)),
+                            block=tuple(Dim3.of(block)), dtype=tag,
+                            grain=grain, devices=d, status="pass",
+                            mode=mode)
+                        try:
+                            twin = frontend_twin(case.name)
+                            out, _ = run_entry(twin, backend,
+                                               grain=grain, devices=d,
+                                               with_reference=False)
+                            base_bits = host_bits.get((backend, d))
+                            if out is not None and base_bits is not None:
+                                got = _bits(out, ())
+                                cell.anchor = f"{backend}/host"
+                                cell.bit_required = True
+                                cell.bit_identical = got == base_bits
+                                if not cell.bit_identical:
+                                    diff = [k for k in got
+                                            if got[k] != base_bits.get(k)]
+                                    cell.status = "fail"
+                                    cell.detail = (
+                                        f"ingested .cu bits differ from "
+                                        f"hand-written twin on {diff}")
+                        except UnsupportedKernel as e:
+                            cell.status = "unsupport"
+                            cell.detail = str(e).splitlines()[0]
+                        cells.append(cell)
                         continue
                     entry = entries[tag]
                     cell, out = run_cell(entry, case, backend, tag, grid,

@@ -99,12 +99,12 @@ class Ctx:
     def __post_init__(self):
         if self.block_dim3 is None:
             self.block_dim3 = Dim3(int(self.block_dim))
-        if self.grid_dim3 is None:
-            g = self.grid_dim
-            # traced grid extent: treat as 1-D (x wide enough that
-            # coords() degenerates to (bid, 0, 0))
-            self.grid_dim3 = (Dim3(int(g)) if isinstance(g, int)
-                              else Dim3(1 << 30))
+        if self.grid_dim3 is None and isinstance(self.grid_dim, int):
+            self.grid_dim3 = Dim3(int(self.grid_dim))
+        # a traced grid_dim with no declared Dim3 geometry leaves
+        # grid_dim3 == None; bid3 raises instead of silently flattening
+        # (every lowering passes grid_dim3 explicitly, so this only
+        # affects hand-constructed Ctx objects)
 
     @property
     def tid3(self):
@@ -114,6 +114,12 @@ class Ctx:
     @property
     def bid3(self):
         """``blockIdx`` as an ``(x, y, z)`` triple of scalars."""
+        if self.grid_dim3 is None:
+            raise UnsupportedKernel(
+                "blockIdx read under a traced grid extent with no Dim3 "
+                "geometry: blockIdx.y/z would silently flatten to 0. "
+                "Pass grid_dim3= when constructing Ctx (the lowerings do)."
+            )
         return self.grid_dim3.coords(self.bid)
 
     @property

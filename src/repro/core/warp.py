@@ -36,10 +36,12 @@ def shfl(val, src_lane):
     """__shfl_sync: every lane reads ``val`` from lane ``src_lane``.
 
     ``src_lane`` may be a scalar or a per-thread array of lane ids.
+    Both forms wrap modulo the warp width, as CUDA specifies (``srcLane``
+    is taken mod ``width``), so lane 37 reads lane 5.
     """
     w = _to_warps(val)
     if jnp.ndim(src_lane) == 0:
-        out = jnp.broadcast_to(w[:, src_lane][:, None], w.shape)
+        out = jnp.broadcast_to(w[:, src_lane % WARP_SIZE][:, None], w.shape)
     else:
         src = _to_warps(jnp.asarray(src_lane)) % WARP_SIZE
         out = jnp.take_along_axis(

@@ -1,0 +1,29 @@
+"""Tiny runtime support for generated stage code.
+
+Generated stages run under the same contract as hand-written ones
+(:mod:`repro.core.kernel`): every thread-private value that crosses a
+``__syncthreads()`` barrier must carry a leading thread-chunk axis so the
+loop lowering can demote it to a ``[block_size]`` register array.  The
+translator wraps each carried local in :func:`carry` rather than proving
+chunkedness statically - a C local initialized from ``threadIdx`` is
+already chunked and passes through untouched, while a scalar constant is
+broadcast.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kernel import UnsupportedKernel
+
+
+def carry(val, tid):
+    """Give a barrier-crossing register the leading thread-chunk axis."""
+    v = jnp.asarray(val)
+    chunk = tid.shape[0]
+    if v.ndim == 0:
+        return jnp.full((chunk,), v)
+    if v.shape[0] == chunk:
+        return val
+    raise UnsupportedKernel(
+        f"cannot carry a value of shape {v.shape} across __syncthreads(): "
+        f"expected a scalar or a leading thread-chunk axis of {chunk}")

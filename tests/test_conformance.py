@@ -126,9 +126,10 @@ def test_chain_cases_grow_mode_cells():
     by_mode = {}
     for c in rep.cells:
         by_mode.setdefault(c.mode, []).append(c)
-    assert set(by_mode) == {"host", "device_resident", "graph", "optimized"}
+    assert set(by_mode) == {"host", "device_resident", "graph", "optimized",
+                            "frontend"}
     assert not rep.disagreements
-    for mode in ("device_resident", "graph", "optimized"):
+    for mode in ("device_resident", "graph", "optimized", "frontend"):
         assert {c.backend for c in by_mode[mode]} == {"loop", "vector"}
         for c in by_mode[mode]:
             assert c.anchor == f"{c.backend}/host"
@@ -136,10 +137,11 @@ def test_chain_cases_grow_mode_cells():
 
 
 def test_single_launch_cases_have_no_replay_mode_cells():
-    """No chain -> no replay legs; the optimized leg runs on every case."""
+    """No chain -> no replay legs; the optimized + frontend legs still
+    run (vecadd has a .cu corpus source)."""
     rep = run_matrix(cases=[CASES["vecadd"]], backends=("loop",),
                      variants=True)
-    assert {c.mode for c in rep.cells} == {"host", "optimized"}
+    assert {c.mode for c in rep.cells} == {"host", "optimized", "frontend"}
 
 
 def test_mode_axis_in_matrix_json():

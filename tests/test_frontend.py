@@ -1,0 +1,278 @@
+"""CUDA-C source frontend: parser, translator, and twin bit-identity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import launch
+from repro.core.cuda_suite import run_entry
+from repro.core.kernel import UnsupportedKernel
+from repro.frontend import translate
+from repro.frontend.suite import CORPUS, _bases, frontend_twin
+
+
+def _bits(out):
+    return {k: np.asarray(v).tobytes() for k, v in out.items()}
+
+
+# --------------------------------------------------------------- parser ----
+def test_barrier_splits_stages():
+    tk = translate("""
+        __global__ void k(float* out) {
+            int t = threadIdx.x;
+            out[t] = 1.0f;
+            __syncthreads();
+            out[t] = out[t] + 1.0f;
+            __syncthreads();
+            out[t] = out[t] * 2.0f;
+        }""")
+    assert len(tk.kernel.stages) == 3
+    assert len(tk.sources) == 3
+
+
+def test_shared_decl_mapping():
+    tk = translate("""
+        __global__ void k(float* out) {
+            __shared__ float s[16 + 2];
+            __shared__ int flags[4];
+            s[threadIdx.x] = 0.0f;
+            flags[threadIdx.x] = 0;
+            __syncthreads();
+            out[threadIdx.x] = s[threadIdx.x];
+        }""")
+    assert tk.kernel.shared["s"] == ((18,), jnp.float32)
+    assert tk.kernel.shared["flags"] == ((4,), jnp.int32)
+
+
+def test_extern_shared_is_dynamic():
+    tk = translate("""
+        __global__ void k(int* d) {
+            extern __shared__ int s[];
+            s[threadIdx.x] = d[threadIdx.x];
+            __syncthreads();
+            d[threadIdx.x] = s[threadIdx.x];
+        }""")
+    assert tk.kernel.shared["s"] == ((-1,), jnp.int32)
+
+
+def test_constant_maps_to_reads():
+    tk = translate("""
+        #define N 8
+        __constant__ int lut[N];
+        __global__ void k(int* out) {
+            out[threadIdx.x] = lut[threadIdx.x];
+        }""")
+    assert tk.constants == ("lut",)
+    assert "lut" in tk.kernel.reads
+    assert tk.kernel.writes == ("out",)
+
+
+def test_writes_follow_param_order():
+    tk = translate("""
+        __global__ void k(int* a, const int* b, int* c, int* unused) {
+            int t = threadIdx.x;
+            c[t] = b[t];
+            a[t] = b[t];
+        }""")
+    # param order, not store order; never-written pointers excluded
+    assert tk.kernel.writes == ("a", "c")
+    assert tk.kernel.reads == ("a", "b", "c", "unused")
+
+
+def test_scalar_param_requires_bind():
+    src = """
+        __global__ void k(float* out, int n) {
+            if (threadIdx.x < n) { out[threadIdx.x] = 1.0f; }
+        }"""
+    with pytest.raises(UnsupportedKernel, match="bind"):
+        translate(src)
+    tk = translate(src, bind={"n": 4})
+    assert "4" in tk.sources[0]
+
+
+def test_macro_bind_overrides_define():
+    src = """
+        #define SCALE 2
+        __global__ void k(int* out) {
+            out[threadIdx.x] = SCALE;
+        }"""
+    out = launch(translate(src).kernel, grid=1, block=4,
+                 args={"out": jnp.zeros(4, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["out"]), [2, 2, 2, 2])
+    out = launch(translate(src, bind={"SCALE": 7}).kernel, grid=1, block=4,
+                 args={"out": jnp.zeros(4, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["out"]), [7, 7, 7, 7])
+
+
+@pytest.mark.parametrize("src,line,msg", [
+    ("__global__ void k(int* o) {\n  while (1) { o[0] = 1; }\n}",
+     2, "out of subset"),
+    ("__global__ void k(int* o) {\n  int* p;\n}", 2, "pointer"),
+    ("__global__ void k(int* o) {\n  __shared__ int s[4][4];\n}",
+     2, "multi-dimensional"),
+    ("__global__ void k(int* o) {\n  o[threadIdx.x] = frobnicate(3);\n}",
+     2, "unknown function"),
+    ("__global__ void k(int* o) {\n  if (threadIdx.x == 0) {\n"
+     "    __syncthreads();\n  }\n}", 3, "uniform"),
+    ("__global__ void k(int* o) {\n  int x = 3;\n  x[2] = 1;\n}",
+     3, "subscript"),
+])
+def test_diagnostics_name_the_line(src, line, msg):
+    with pytest.raises(UnsupportedKernel, match=msg) as exc:
+        translate(src)
+    assert f"line {line}" in str(exc.value)
+
+
+def test_function_like_macro_rejected():
+    with pytest.raises(UnsupportedKernel, match="function-like"):
+        translate("#define SQ(x) ((x)*(x))\n"
+                  "__global__ void k(int* o) { o[0] = SQ(2); }")
+
+
+# ----------------------------------------------------------- translator ----
+def test_atomic_add_lowers_to_ctx_call():
+    tk = translate("""
+        __global__ void k(int* hist, const int* x) {
+            atomicAdd(&hist[x[threadIdx.x]], 1);
+        }""")
+    assert "ctx.atomic_add(hist" in tk.sources[0]
+    out = launch(tk.kernel, grid=1, block=4,
+                 args={"hist": jnp.zeros(3, jnp.int32),
+                       "x": jnp.asarray([0, 1, 1, 2], jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["hist"]), [1, 2, 1])
+
+
+def test_atomic_cas_captures_old():
+    tk = translate("""
+        __global__ void k(int* flags, int* won) {
+            int old = atomicCAS(&flags[0], 0, 1);
+            won[threadIdx.x] = old == 0;
+        }""")
+    out = launch(tk.kernel, grid=1, block=4,
+                 args={"flags": jnp.zeros(1, jnp.int32),
+                       "won": jnp.zeros(4, jnp.int32)})
+    # serialized thread order: only thread 0 sees the pre-swap 0
+    np.testing.assert_array_equal(np.asarray(out["won"]), [1, 0, 0, 0])
+
+
+def test_atomic_exch_statement_form():
+    tk = translate("""
+        __global__ void k(int* slot) {
+            atomicExch(&slot[0], threadIdx.x);
+        }""")
+    out = launch(tk.kernel, grid=1, block=4,
+                 args={"slot": jnp.zeros(1, jnp.int32)})
+    assert int(np.asarray(out["slot"])[0]) == 3   # last thread survives
+
+
+def test_shfl_and_ballot_set_uses_warp():
+    tk = translate("""
+        __global__ void k(int* out, const int* x) {
+            int t = threadIdx.x;
+            int v = __shfl_sync(0xffffffff, x[t], 5);
+            int b = __ballot_sync(0xffffffff, x[t] > 0);
+            out[t] = v + b * 0;
+        }""")
+    assert tk.kernel.uses_warp
+    x = np.arange(32, dtype=np.int32)
+    out = launch(tk.kernel, grid=1, block=32,
+                 args={"out": jnp.zeros(32, jnp.int32),
+                       "x": jnp.asarray(x)})
+    np.testing.assert_array_equal(np.asarray(out["out"]), np.full(32, 5))
+
+
+def test_syncthreads_count_matches_oracle():
+    tk = translate("""
+        __global__ void k(int* out, const int* x) {
+            int n = __syncthreads_count(x[threadIdx.x] > 10);
+            out[threadIdx.x] = n;
+        }""")
+    assert tk.kernel.uses_warp
+    x = np.arange(32, dtype=np.int32)
+    out = launch(tk.kernel, grid=1, block=32,
+                 args={"out": jnp.zeros(32, jnp.int32),
+                       "x": jnp.asarray(x)})
+    np.testing.assert_array_equal(np.asarray(out["out"]),
+                                  np.full(32, int((x > 10).sum())))
+
+
+def test_early_return_masks_remainder():
+    tk = translate("""
+        __global__ void k(int* out) {
+            int t = threadIdx.x;
+            if (t >= 4) return;
+            out[t] = t + 1;
+        }""")
+    out = launch(tk.kernel, grid=1, block=8,
+                 args={"out": jnp.zeros(8, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["out"]),
+                                  [1, 2, 3, 4, 0, 0, 0, 0])
+
+
+def test_constant_trip_for_unrolls_at_trace():
+    tk = translate("""
+        #define K 5
+        __global__ void k(int* out) {
+            int acc = 0;
+            for (int i = 0; i < K; i++) {
+                acc = acc + i;
+            }
+            out[threadIdx.x] = acc;
+        }""")
+    assert "for i in range(0, 5, 1):" in tk.sources[0]
+    out = launch(tk.kernel, grid=1, block=4,
+                 args={"out": jnp.zeros(4, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["out"]), np.full(4, 10))
+
+
+def test_carry_across_barrier():
+    tk = translate("""
+        __global__ void k(int* out, const int* x) {
+            __shared__ int s[8];
+            int t = threadIdx.x;
+            int mine = x[t];
+            s[7 - t] = mine;
+            __syncthreads();
+            out[t] = s[t] + mine;
+        }""")
+    # `mine` and `t` must ride st.priv across the barrier
+    assert "_carry(mine, ctx.tid)" in tk.sources[0]
+    x = np.arange(8, dtype=np.int32)
+    out = launch(tk.kernel, grid=1, block=8,
+                 args={"out": jnp.zeros(8, jnp.int32),
+                       "x": jnp.asarray(x)})
+    np.testing.assert_array_equal(np.asarray(out["out"]), x[::-1] + x)
+
+
+def test_fingerprint_stable_across_translations():
+    src = """
+        __global__ void k(float* out) {
+            out[threadIdx.x] = 0.5f;
+        }"""
+    assert (translate(src).kernel.fingerprint()
+            == translate(src).kernel.fingerprint())
+
+
+# --------------------------------------------- corpus twin bit-identity ----
+@pytest.mark.parametrize("backend", ["loop", "vector"])
+@pytest.mark.parametrize("name", CORPUS)
+def test_corpus_twin_bit_identical(name, backend):
+    base_out, _ = run_entry(_bases()[name], backend)
+    twin_out, _ = run_entry(frontend_twin(name), backend,
+                            with_reference=False)
+    assert _bits(base_out) == _bits(twin_out)
+
+
+def test_injected_mistranslation_is_caught():
+    """The gate's --inject self-test: a planted macro override must
+    produce divergent bits (a gate that cannot fail gates nothing)."""
+    base_out, _ = run_entry(_bases()["needle_nw"], "loop")
+    twin_out, _ = run_entry(
+        frontend_twin("needle_nw", overrides={"PENALTY": 3}), "loop",
+        with_reference=False)
+    assert _bits(base_out) != _bits(twin_out)
+
+
+def test_gate_cli_reports_pass():
+    from repro.frontend.__main__ import run_gate
+    rows = run_gate(kernels=("vecadd",), backends=("loop",))
+    assert [r["status"] for r in rows] == ["pass"]

@@ -131,3 +131,110 @@ def test_syncthreads_count_needs_whole_block():
     from repro.core import UnsupportedKernel
     with pytest.raises(UnsupportedKernel, match="span the block"):
         warp.syncthreads_count(jnp.zeros(32, bool), 64)
+
+
+# ---- negative-index wraparound regressions (_serial_rmw) ------------------
+def test_atomic_cas_negative_index_stores_nothing():
+    """Regression: idx=-1 used to wrap to arr[-1] via Python indexing and
+    claim the LAST slot; negative indices mark inactive threads, exactly
+    like past-the-end ones."""
+    arr = jnp.zeros(4, jnp.int32)
+    new, old = atomics.atomic_cas(arr, jnp.asarray([-1]), jnp.asarray([0]),
+                                  jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(new), [0, 0, 0, 0])
+
+
+def test_atomic_exch_negative_index_stores_nothing():
+    arr = jnp.asarray([1, 2, 3], jnp.int32)
+    new, old = atomics.atomic_exch(arr, jnp.asarray([-2]), jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(new), [1, 2, 3])
+
+
+def test_atomic_cas_mixed_active_and_negative():
+    arr = jnp.zeros(4, jnp.int32)
+    idx = jnp.asarray([-1, 2, -3, 2])
+    cmp = jnp.zeros(4, jnp.int32)
+    val = jnp.asarray([7, 8, 9, 5])
+    new, old = atomics.atomic_cas(arr, idx, cmp, val)
+    np.testing.assert_array_equal(np.asarray(new), [0, 0, 8, 0])
+    # thread 1 won slot 2; thread 3 observed the swapped-in 8
+    assert int(np.asarray(old)[1]) == 0 and int(np.asarray(old)[3]) == 8
+
+
+@pytest.mark.parametrize("backend", ["loop", "vector"])
+def test_atomic_cas_negative_index_per_backend(backend):
+    """The wraparound bug end-to-end: inactive threads CAS index -1; the
+    last element must stay unclaimed under every lowering."""
+    from repro.core import launch
+    from repro.core.kernel import KernelDef
+
+    def stage(ctx, st):
+        flags = st.glob["flags"]
+        idx = jnp.where(ctx.tid == 0, 0, -1)
+        flags, _old = ctx.atomic_cas(flags, idx, 0, 1)
+        return st.set_glob(flags=flags)
+
+    k = KernelDef("cas_neg", (stage,), writes=("flags",), reads=("flags",))
+    out = launch(k, grid=1, block=8, backend=backend,
+                 args={"flags": jnp.zeros(8, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["flags"]),
+                                  [1, 0, 0, 0, 0, 0, 0, 0])
+
+
+# ---- scalar-lane shuffle wrap regressions ---------------------------------
+def test_shfl_scalar_lane_wraps_mod_warp():
+    """Regression: a scalar src_lane >= 32 used to index out of the lane
+    axis (or wrap Python-style for negatives); CUDA takes srcLane mod 32."""
+    v = jnp.arange(64, dtype=jnp.float32)
+    out = np.asarray(warp.shfl(v, 37))
+    want = np.concatenate([np.full(32, 5.0), np.full(32, 37.0)])
+    np.testing.assert_array_equal(out, want)
+
+
+def test_shfl_scalar_lane_matches_numpy_oracle():
+    rng = np.random.default_rng(7)
+    v = rng.standard_normal(96).astype(np.float32)
+    for lane in (0, 5, 31, 32, 63, 100):
+        out = np.asarray(warp.shfl(jnp.asarray(v), lane))
+        want = np.repeat(v.reshape(-1, 32)[:, lane % 32], 32)
+        np.testing.assert_array_equal(out, want)
+
+
+def test_shfl_property_vs_numpy_oracle():
+    pytest.importorskip("hypothesis")  # not in the baked image
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(nwarps=st.integers(1, 4), lane=st.integers(0, 200),
+           seed=st.integers(0, 1000))
+    def prop(nwarps, lane, seed):
+        r = np.random.default_rng(seed)
+        v = r.standard_normal(nwarps * 32).astype(np.float32)
+        out = np.asarray(warp.shfl(jnp.asarray(v), lane))
+        want = np.repeat(v.reshape(-1, 32)[:, lane % 32], 32)
+        np.testing.assert_array_equal(out, want)
+
+    prop()
+
+
+# ---- traced-grid blockIdx flattening guard --------------------------------
+def test_bid3_traced_grid_raises():
+    """Regression: a hand-built Ctx with a traced grid extent and no Dim3
+    geometry used to flatten blockIdx.y/z silently to 0; it must refuse."""
+    from repro.core import UnsupportedKernel
+    from repro.core.kernel import Ctx
+
+    ctx = Ctx(bid=jnp.int32(3), tid=jnp.zeros(4, jnp.int32), block_dim=4,
+              grid_dim=jnp.int32(5), backend="loop")
+    with pytest.raises(UnsupportedKernel, match="traced grid"):
+        _ = ctx.bid3
+
+
+def test_bid3_int_grid_still_works():
+    from repro.core.kernel import Ctx
+
+    ctx = Ctx(bid=jnp.int32(3), tid=jnp.zeros(4, jnp.int32), block_dim=4,
+              grid_dim=5, backend="loop")
+    x, y, z = ctx.bid3
+    assert int(x) == 3 and int(y) == 0 and int(z) == 0
