@@ -1,14 +1,20 @@
-"""Coverage gate: fail CI when any backend's suite pass-count regresses.
+"""Coverage gate: fail CI when any backend's suite coverage regresses.
 
 Runs the Table-II coverage sweep (``benchmarks/coverage.py``) and compares
-each backend's number of correct kernels against the committed baseline in
-``benchmarks/coverage_baseline.json``.  Any drop fails the gate; gains
-(e.g. a new backend adding a row per kernel) are reported with a hint to
-refresh the baseline via ``--update`` - regenerate it, never hand-edit.
+each backend's number of correct kernels *and* its paper-style coverage
+percentage (the figure published next to the paper's 69.6%/56.6%) against
+the committed baseline in ``benchmarks/coverage_baseline.json``.  Any drop
+fails the gate; gains (e.g. a new backend adding a row per kernel) are
+reported with a hint to refresh the baseline via ``--update`` - regenerate
+it, never hand-edit.  The percentage check matters independently of the
+raw counts: growing the suite by five kernels while supporting none of
+them keeps every count flat but dilutes the percentage, which is exactly
+the regression the paper's headline figure would catch.
 
 ``--disable KERNEL`` artificially marks one suite kernel unsupported on
 every backend before comparing - CI uses this to prove the gate actually
-trips (a gate that cannot fail gates nothing).
+trips (a gate that cannot fail gates nothing).  ``--json PATH`` writes the
+measured counts/percentages as a machine-readable artifact for CI upload.
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "coverage_baseline.json")
 
 
-def current_counts(disable: str | None = None) -> tuple[dict, int]:
+def current_counts(disable: str | None = None) -> tuple[dict, dict, int]:
     table = coverage_bench.run()
     if disable is not None:
         if disable not in table:
@@ -34,7 +40,8 @@ def current_counts(disable: str | None = None) -> tuple[dict, int]:
         table[disable] = ({fw: "unsupport" for fw in row}, feats)
     counts = {fw: sum(table[k][0][fw] == "correct" for k in table)
               for fw in coverage_bench.frameworks()}
-    return counts, len(table)
+    pct = coverage_bench.percentages(table)
+    return counts, {fw: round(pct[fw], 1) for fw in counts}, len(table)
 
 
 def main(argv=None) -> int:
@@ -46,14 +53,24 @@ def main(argv=None) -> int:
     ap.add_argument("--disable", metavar="KERNEL",
                     help="artificially disable one kernel (gate self-test)")
     ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measured counts/percentages here "
+                         "(CI artifact)")
     args = ap.parse_args(argv)
 
-    counts, n_kernels = current_counts(args.disable)
+    counts, percent, n_kernels = current_counts(args.disable)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"n_kernels": n_kernels, "backends": counts,
+                       "percent": percent}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"coverage artifact written: {args.json}")
 
     if args.write:
         with open(args.baseline, "w") as f:
-            json.dump({"n_kernels": n_kernels, "backends": counts}, f,
-                      indent=2, sort_keys=True)
+            json.dump({"n_kernels": n_kernels, "backends": counts,
+                       "percent": percent}, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"baseline written: {args.baseline}")
         return 0
@@ -67,6 +84,7 @@ def main(argv=None) -> int:
         return 2
 
     failed = False
+    base_pct = base.get("percent", {})
     for fw, want in sorted(base["backends"].items()):
         got = counts.get(fw)
         if got is None:
@@ -78,11 +96,18 @@ def main(argv=None) -> int:
             print(f"FAIL {fw}: {got}/{n_kernels} correct, baseline "
                   f"{want}/{base['n_kernels']}", file=sys.stderr)
             failed = True
+        elif fw in base_pct and percent[fw] < base_pct[fw]:
+            # counts held but the published percentage regressed - the
+            # suite grew faster than this backend's support
+            print(f"FAIL {fw}: coverage {percent[fw]}% below baseline "
+                  f"{base_pct[fw]}%", file=sys.stderr)
+            failed = True
         elif got > want:
-            print(f"PASS {fw}: {got}/{n_kernels} correct (baseline {want}; "
-                  f"refresh with --write)")
+            print(f"PASS {fw}: {got}/{n_kernels} correct "
+                  f"({percent[fw]}%; baseline {want}; refresh with "
+                  f"--write)")
         else:
-            print(f"PASS {fw}: {got}/{n_kernels} correct")
+            print(f"PASS {fw}: {got}/{n_kernels} correct ({percent[fw]}%)")
     for fw in sorted(set(counts) - set(base["backends"])):
         print(f"NOTE {fw}: new backend ({counts[fw]}/{n_kernels} correct), "
               f"not in baseline")

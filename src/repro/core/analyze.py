@@ -157,13 +157,15 @@ class KernelReport:
 class _StageAcc:
     """Access table for one buffer during one stage (barrier interval)."""
 
-    __slots__ = ("reads", "writes", "accums", "read_all", "whole_write",
-                 "read_ops", "write_ops", "accum_ops", "accum_kinds", "oob")
+    __slots__ = ("reads", "writes", "accums", "touched", "read_all",
+                 "whole_write", "read_ops", "write_ops", "accum_ops",
+                 "accum_kinds", "oob")
 
     def __init__(self):
         self.reads: dict[int, set] = {}    # flat loc -> thread ids
         self.writes: dict[int, set] = {}   # value-changing writes only
         self.accums: dict[int, set] = {}   # value-changing accumulations
+        self.touched: dict[int, set] = {}  # ALL attempted writes/accums
         self.read_all = False              # whole buffer read by all threads
         self.whole_write = False           # opaque rebind: assume all written
         self.read_ops = 0
@@ -173,7 +175,8 @@ class _StageAcc:
         self.oob = 0                       # flagged (non-drop) OOB positions
 
     def touched_write(self) -> bool:
-        return bool(self.writes or self.accums or self.whole_write)
+        return bool(self.touched or self.writes or self.accums
+                    or self.whole_write)
 
 
 class _BufRec:
@@ -215,6 +218,7 @@ class _BufRec:
             self.cur.whole_write = True
             return
         _merge(self.cur.writes, _restrict(fp.locs, changed))
+        _merge(self.cur.touched, fp.locs)
 
     def record_accum(self, kind: str, fp: "_Footprint", changed, *,
                      dropped: bool):
@@ -226,6 +230,7 @@ class _BufRec:
             self.cur.whole_write = True
             return
         _merge(self.cur.accums, _restrict(fp.locs, changed))
+        _merge(self.cur.touched, fp.locs)
 
     def record_opaque_write(self):
         """A stage rebound this buffer to an untracked array."""
@@ -883,15 +888,24 @@ def _donation_findings(kernel: KernelDef, per_block):
 
 def _pair_dep(rec: _BufRec, a: _StageAcc, b: _StageAcc,
               block_size: int) -> str | None:
-    """Cross-thread dependence carried by ``rec`` from stage a to b."""
+    """Cross-thread dependence carried by ``rec`` from stage a to b.
+
+    Ordering uses the *attempted* write footprints (``touched``), not the
+    value-changing ones: a write that happened to store an unchanged value
+    under the sample inputs still orders against other threads in general,
+    and a fusion proof built from value diffs would be unsound (e.g. an
+    argmin tree level that keeps its value on the sampled data but swaps
+    on real data)."""
     if a.whole_write or b.whole_write:
         if (a.touched_write() or a.read_ops) and \
                 (b.touched_write() or b.read_ops) and block_size > 1:
             return "opaque whole-buffer write"
-    a_w = {loc: (a.writes.get(loc, set()) | a.accums.get(loc, set()))
-           for loc in (*a.writes, *a.accums)}
-    b_w = {loc: (b.writes.get(loc, set()) | b.accums.get(loc, set()))
-           for loc in (*b.writes, *b.accums)}
+    a_w = {loc: (a.touched.get(loc, set()) | a.writes.get(loc, set())
+                 | a.accums.get(loc, set()))
+           for loc in (*a.touched, *a.writes, *a.accums)}
+    b_w = {loc: (b.touched.get(loc, set()) | b.writes.get(loc, set())
+                 | b.accums.get(loc, set()))
+           for loc in (*b.touched, *b.writes, *b.accums)}
     if a_w and b.read_all and block_size > 1:
         return "written then read whole-buffer by all threads"
     if b_w and a.read_all and block_size > 1:
@@ -956,7 +970,10 @@ def _shared_facts(per_block) -> dict:
                 if acc.read_all or acc.whole_write:
                     fs["private"] = False
                     continue
-                for table in (acc.reads, acc.writes, acc.accums):
+                # privacy must see attempted (touched) writes too: a no-op
+                # write by another thread still disqualifies scalarization
+                for table in (acc.reads, acc.writes, acc.accums,
+                              acc.touched):
                     for loc, tids in table.items():
                         if ALL in tids or len(tids) > 1:
                             fs["private"] = False
@@ -1049,7 +1066,7 @@ def analyze_entry(entry, *, sample_blocks: int = 3,
 
 def analyze_suite(*, names: Sequence[str] | None = None, scale: int = 1,
                   sample_blocks: int = 3) -> list[KernelReport]:
-    """Run kernelcheck across the CUDA suite (all 18 kernels by default)."""
+    """Run kernelcheck across the CUDA suite (all 23 kernels by default)."""
     from repro.core import cuda_suite
     entries = cuda_suite.build_suite(scale=scale)
     if names:

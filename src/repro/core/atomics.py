@@ -76,16 +76,30 @@ def combine_partials(mode: str, before, after, axis_name: str):
         f"backend's output sharding, not here)")
 
 
+def _drop_negative(arr, idx):
+    """Sanitize negative indices to the past-the-end drop sentinel.
+
+    ``.at[idx].op(val, mode="drop")`` only drops *past-the-end* indices:
+    JAX applies negative indexing before the OOB mode, so ``-1`` silently
+    wraps to the last element - exactly the left-halo stencil index a
+    CUDA kernel expects to be discarded.  Rewriting negatives to
+    ``arr.shape[0]`` makes them genuinely out of bounds, restoring the
+    documented OOB-drop contract.
+    """
+    idx = jnp.asarray(idx)
+    return jnp.where(idx < 0, arr.shape[0], idx)
+
+
 def atomic_add(arr, idx, val):
-    return arr.at[idx].add(val, mode="drop")
+    return arr.at[_drop_negative(arr, idx)].add(val, mode="drop")
 
 
 def atomic_max(arr, idx, val):
-    return arr.at[idx].max(val, mode="drop")
+    return arr.at[_drop_negative(arr, idx)].max(val, mode="drop")
 
 
 def atomic_min(arr, idx, val):
-    return arr.at[idx].min(val, mode="drop")
+    return arr.at[_drop_negative(arr, idx)].min(val, mode="drop")
 
 
 def _first_occurrence(idx):
@@ -162,10 +176,17 @@ def atomic_cas_first(arr, idx, cmp, val):
     For each position ``idx[t]``: if ``arr[idx[t]] == cmp[t]`` the value of
     the *lowest* t whose compare succeeds is stored.  Like
     :func:`atomic_cas` but returns only the updated array (legacy form).
+
+    Indices outside ``[0, arr.shape[0])`` - negative or at/past the end -
+    mark inactive threads and store nothing, matching :func:`_serial_rmw`:
+    a bare ``arr[idx]`` gather or ``mode="drop"`` scatter would wrap a
+    negative index onto ``arr[-1]`` and corrupt the last element.
     """
     idx = jnp.asarray(idx)
+    n = arr.shape[0]
+    active = (idx >= 0) & (idx < n)
     is_first = _first_occurrence(idx)
-    old = arr[idx]
-    ok = (old == cmp) & is_first
-    safe_idx = jnp.where(ok, idx, arr.shape[0])             # OOB drops
+    old = arr[jnp.clip(idx, 0, n - 1)]
+    ok = (old == cmp) & is_first & active
+    safe_idx = jnp.where(ok, idx, n)                        # OOB drops
     return arr.at[safe_idx].set(jnp.where(ok, val, 0), mode="drop")

@@ -359,6 +359,13 @@ def build_cases() -> list[ConformanceCase]:
         ConformanceCase("backprop_layer", _make_from("backprop_layer")),
         ConformanceCase("lud_diag", _make_from("lud_diag")),
         ConformanceCase("srad_step", _make_from("srad_step")),
+        ConformanceCase("lavamd", _make_from("lavamd")),
+        ConformanceCase("nn", _make_from("nn")),
+        ConformanceCase("kmeans", _make_from("kmeans")),
+        ConformanceCase("streamcluster",
+                        _make_from("streamcluster", base_tag="i32"),
+                        dtypes=("i32",)),
+        ConformanceCase("hotspot", _make_from("hotspot")),
     ]
 
 

@@ -24,13 +24,23 @@ the paper's Table II:
 | backprop_layer      | backprop                | barrier tree + __constant__, owned-slice writes |
 | lud_diag            | lud (diagonal step)     | many barriers, in-shared pivoting, owned-slice writes |
 | srad_step           | srad                    | stencil + two-phase global reduction chain |
+| lavamd              | lavaMD                  | neighbor-list gather into heavy __shared__, register demotion |
+| nn                  | nn                      | cane record-file ingest, chained two-level top-k arg-min |
+| kmeans              | kmeans                  | convergence chain, device-resident stop, irregular atomicAdd |
+| streamcluster       | streamcluster           | dynamic assignment, duplicate atomicAdd + atomicCAS claims |
+| hotspot             | hotspot                 | temp/power grid-file ingest, chained 2-D halo stencil |
 
-The last six are the Rodinia-mini expansion: wavefront kernels iterate via
-:class:`repro.core.kernel.LaunchChain` (host-driven inter-launch
-dependencies), BFS claims nodes with ``atomicCAS`` visited flags and counts
-its next frontier with ``__syncthreads_count``, and the read-only inputs of
-bfs/backprop ride in ``__constant__`` space (:class:`repro.core.memory
-.ConstArray`).
+Rows bfs_frontier through srad_step are the Rodinia-mini expansion:
+wavefront kernels iterate via :class:`repro.core.kernel.LaunchChain`
+(host-driven inter-launch dependencies), BFS claims nodes with
+``atomicCAS`` visited flags and counts its next frontier with
+``__syncthreads_count``, and the read-only inputs of bfs/backprop ride in
+``__constant__`` space (:class:`repro.core.memory.ConstArray`).  The last
+five rows are the coverage sprint toward the paper's 69.6% Rodinia figure:
+lavaMD's neighbor-box traversal, nn/hotspot's file-driven input pipelines
+(:mod:`repro.core.rodinia_io`), kmeans' iterative-convergence chain with a
+device-resident stop predicate, and streamcluster's irregular
+atomicAdd/CAS mix.
 """
 from __future__ import annotations
 
@@ -41,7 +51,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import memory
+from repro.core import memory, rodinia_io
 from repro.core.api import launch
 from repro.core.kernel import ChainStats, ChainStep, KernelDef, LaunchChain
 
@@ -736,6 +746,323 @@ def make_srad_update(h: int, w: int, lam: float = 0.2, tile_y: int = 8,
 
 
 # --------------------------------------------------------------------------
+# lavaMD (Rodinia lavaMD): per-box particle interactions over a neighbor
+# list.  Each block owns one home box; for every neighbor box it stages that
+# box's particle positions and charges into shared memory, barriers, and
+# accumulates the pairwise potential into a register accumulator that lives
+# across 2*nnei barriers (the same register-demotion stress as matmul_tiled,
+# but with an indirect neighbor-list gather choosing what to stage).
+# --------------------------------------------------------------------------
+def make_lavamd(nboxes: int, ppb: int, nnei: int,
+                alpha: float = 0.5) -> KernelDef:
+    def init(ctx, st):
+        return st.with_priv({"acc": jnp.zeros(ctx.tid.shape, jnp.float32)})
+
+    def make_load(k):
+        def load(ctx, st):
+            nb = st.glob["nbr"][ctx.bid, k]
+            base = nb * ppb
+            sy = st.shared["sy"].at[ctx.tid].set(
+                st.glob["pos"][base + ctx.tid])
+            sq = st.shared["sq"].at[ctx.tid].set(
+                st.glob["q"][base + ctx.tid])
+            return st.set_shared(sy=sy, sq=sq)
+        return load
+
+    def compute(ctx, st):
+        x = st.glob["pos"][ctx.bid * ppb + ctx.tid]
+        sy, sq = st.shared["sy"], st.shared["sq"]
+        d = x[:, None] - sy[None, :]
+        u = jnp.sum(sq[None, :] * jnp.exp(-alpha * d * d), axis=1)
+        return st.with_priv({"acc": st.priv["acc"] + u})
+
+    def store(ctx, st):
+        f = st.glob["force"].at[ctx.bid * ppb + ctx.tid].set(st.priv["acc"])
+        return st.with_priv({}).set_glob(force=f)
+
+    stages = [init]
+    for k in range(nnei):
+        stages += [make_load(k), compute]
+    stages.append(store)
+    return KernelDef(
+        "lavamd", tuple(stages), writes=("force",),
+        reads=("pos", "q", "nbr", "force"),
+        shared={"sy": ((ppb,), jnp.float32), "sq": ((ppb,), jnp.float32)},
+        combines={"force": "concat"},  # block b owns rows [b*ppb, b*ppb+ppb)
+        est_block_work=nnei * ppb * ppb * 6.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# nn (Rodinia nn): k-nearest-neighbor search over hurricane records.  The
+# records arrive through the cane-file text format (rodinia_io), and each
+# of the k output slots is one chain iteration: a two-level barrier-tree
+# arg-min (per-block partials, then a single-block final reduction) whose
+# winner is appended to the output and masked out of the next pass via the
+# `taken` flags.  The (value, index) pairs reduce lexicographically so ties
+# break toward the lowest record index, matching np.argmin.
+# --------------------------------------------------------------------------
+def _nn_argmin_level(off):
+    def level(ctx, st):
+        sv, si = st.shared["sv"], st.shared["si"]
+        v1, i1 = sv[ctx.tid], si[ctx.tid]
+        v2, i2 = sv[ctx.tid + off], si[ctx.tid + off]
+        take = (ctx.tid < off) & ((v2 < v1) | ((v2 == v1) & (i2 < i1)))
+        return st.set_shared(sv=sv.at[ctx.tid].set(jnp.where(take, v2, v1)),
+                             si=si.at[ctx.tid].set(jnp.where(take, i2, i1)))
+    return level
+
+
+def make_nn_reduce(n: int, block: int) -> KernelDef:
+    assert block & (block - 1) == 0
+
+    def load(ctx, st):
+        i = _gid(ctx)
+        g = jnp.minimum(i, n - 1)
+        tgt = st.glob["target"]
+        d = ((st.glob["lat"][g] - tgt[0]) ** 2
+             + (st.glob["lng"][g] - tgt[1]) ** 2)
+        d = jnp.where((i < n) & (st.glob["taken"][g] == 0), d, jnp.inf)
+        sv = st.shared["sv"].at[ctx.tid].set(d)
+        si = st.shared["si"].at[ctx.tid].set(g)
+        return st.set_shared(sv=sv, si=si)
+
+    def store(ctx, st):
+        idx = jnp.where(ctx.tid == 0, ctx.bid, OOB)
+        pv = st.glob["pval"].at[idx].set(st.shared["sv"][0], mode="drop")
+        pi = st.glob["pidx"].at[idx].set(st.shared["si"][0], mode="drop")
+        return st.set_glob(pval=pv, pidx=pi)
+
+    stages = [load]
+    off = block // 2
+    while off >= 1:
+        stages.append(_nn_argmin_level(off))
+        off //= 2
+    stages.append(store)
+    return KernelDef(
+        "nn_reduce", tuple(stages), writes=("pval", "pidx"),
+        reads=("lat", "lng", "target", "taken", "pval", "pidx"),
+        shared={"sv": ((block,), jnp.float32), "si": ((block,), jnp.int32)},
+        combines={"pval": "concat", "pidx": "concat"},
+        donates=("pval", "pidx"),      # fully rewritten every launch
+        est_block_work=block * 8.0,
+    )
+
+
+def make_nn_select(nblocks: int) -> KernelDef:
+    assert nblocks & (nblocks - 1) == 0
+
+    def load(ctx, st):
+        sv = st.shared["sv"].at[ctx.tid].set(st.glob["pval"][ctx.tid])
+        si = st.shared["si"].at[ctx.tid].set(st.glob["pidx"][ctx.tid])
+        return st.set_shared(sv=sv, si=si)
+
+    def store(ctx, st):
+        step = st.glob["step"][0]
+        win_v, win_i = st.shared["sv"][0], st.shared["si"][0]
+        oidx = jnp.where(ctx.tid == 0, step, OOB)
+        od = st.glob["out_d"].at[oidx].set(win_v, mode="drop")
+        oi = st.glob["out_i"].at[oidx].set(win_i, mode="drop")
+        tk = st.glob["taken"].at[
+            jnp.where(ctx.tid == 0, win_i, OOB)].set(1, mode="drop")
+        return st.set_glob(out_d=od, out_i=oi, taken=tk)
+
+    stages = [load]
+    off = nblocks // 2
+    while off >= 1:
+        stages.append(_nn_argmin_level(off))
+        off //= 2
+    stages.append(store)
+    return KernelDef(
+        "nn_select", tuple(stages), writes=("out_d", "out_i", "taken"),
+        reads=("pval", "pidx", "step", "out_d", "out_i", "taken"),
+        shared={"sv": ((nblocks,), jnp.float32),
+                "si": ((nblocks,), jnp.int32)},
+        # out slots are written once each, from zero; taken flips 0->1
+        combines={"out_d": "sum", "out_i": "sum", "taken": "max"},
+        est_block_work=nblocks * 6.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# kmeans (Rodinia kmeans): Lloyd iterations as a convergence LaunchChain.
+# The assign kernel labels every point with its nearest centroid and
+# accumulates per-cluster coordinate sums / counts / a moved-points counter
+# with atomicAdd (duplicate-heavy irregular scatters); the update kernel
+# recomputes centroids from the sums.  The chain's device-resident stop
+# predicate polls `changed == 0`; the whole fixed point is bit-stable, so
+# overshooting the converged state is an exact no-op on every buffer.
+# Coordinates are integer-valued floats, keeping every sum and the final
+# centroid division exact across backends and shard merges.
+# --------------------------------------------------------------------------
+def make_kmeans_assign(n: int, k: int) -> KernelDef:
+    def stage(ctx, st):
+        i = _gid(ctx)
+        g = jnp.minimum(i, n - 1)
+        px, py = st.glob["px"][g], st.glob["py"][g]
+        cx, cy = st.glob["cx"], st.glob["cy"]
+        best = jnp.zeros_like(g)
+        bestd = (px - cx[0]) ** 2 + (py - cy[0]) ** 2
+        for c in range(1, k):
+            dc = (px - cx[c]) ** 2 + (py - cy[c]) ** 2
+            closer = dc < bestd          # strict: ties keep the lower c
+            best = jnp.where(closer, c, best)
+            bestd = jnp.where(closer, dc, bestd)
+        valid = i < n
+        moved = valid & (st.glob["assign"][g] != best)
+        changed = ctx.atomic_add(st.glob["changed"],
+                                 jnp.where(moved, 0, OOB), 1)
+        assign = st.glob["assign"].at[jnp.where(valid, i, OOB)].set(
+            best, mode="drop")
+        bidx = jnp.where(valid, best, OOB)
+        sumx = ctx.atomic_add(st.glob["sumx"], bidx, px)
+        sumy = ctx.atomic_add(st.glob["sumy"], bidx, py)
+        count = ctx.atomic_add(st.glob["count"], bidx, 1)
+        return st.set_glob(changed=changed, assign=assign, sumx=sumx,
+                           sumy=sumy, count=count)
+
+    return KernelDef(
+        "kmeans_assign", (stage,),
+        writes=("assign", "changed", "sumx", "sumy", "count"),
+        reads=("px", "py", "cx", "cy", "assign", "changed", "sumx",
+               "sumy", "count"),
+        combines={"assign": "concat", "changed": "sum", "sumx": "sum",
+                  "sumy": "sum", "count": "sum"},
+        donates=("changed", "sumx", "sumy", "count"),  # re-zeroed per iter
+        est_block_work=k * 64.0,
+    )
+
+
+def make_kmeans_update(k: int) -> KernelDef:
+    def stage(ctx, st):
+        c = ctx.bid
+        cnt = st.glob["count"][c]
+        safe = jnp.maximum(cnt, 1).astype(jnp.float32)
+        nx = st.glob["sumx"][c] / safe
+        ny = st.glob["sumy"][c] / safe
+        empty = cnt == 0                 # empty cluster keeps its centroid
+        nx = jnp.where(empty, st.glob["cx"][c], nx)
+        ny = jnp.where(empty, st.glob["cy"][c], ny)
+        idx = jnp.where(ctx.tid == 0, c, OOB)
+        cx = st.glob["cx"].at[idx].set(nx, mode="drop")
+        cy = st.glob["cy"].at[idx].set(ny, mode="drop")
+        return st.set_glob(cx=cx, cy=cy)
+
+    return KernelDef(
+        "kmeans_update", (stage,), writes=("cx", "cy"),
+        reads=("sumx", "sumy", "count", "cx", "cy"),
+        combines={"cx": "concat", "cy": "concat"},  # block c owns row c
+        est_block_work=16.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# streamcluster (Rodinia streamcluster pgain): evaluate opening a candidate
+# center.  Every point compares its current assignment cost against the
+# candidate; switchers accumulate the global gain and their old center's
+# per-center savings with duplicate-heavy atomicAdd, and claim the old
+# center's dirty flag with atomicCAS (the CAS winner bumps a distinct-dirty
+# counter - deduplicated per device, hence nondeterministic under shard).
+# --------------------------------------------------------------------------
+def make_streamcluster(n: int, k: int) -> KernelDef:
+    def stage(ctx, st):
+        i = _gid(ctx)
+        g = jnp.minimum(i, n - 1)
+        valid = i < n
+        a = st.glob["assign"][g]
+        px, py = st.glob["px"][g], st.glob["py"][g]
+        cx, cy = st.glob["cx"], st.glob["cy"]
+        dcur = (px - cx[a]) ** 2 + (py - cy[a]) ** 2
+        cand = st.glob["cand"]
+        dcand = (px - cand[0]) ** 2 + (py - cand[1]) ** 2
+        sw = valid & (dcand < dcur)
+        save = dcur - dcand
+        gain = ctx.atomic_add(st.glob["gain"],
+                              jnp.where(sw, 0, OOB), save)
+        csave = ctx.atomic_add(st.glob["csave"],
+                               jnp.where(sw, a, OOB), save)
+        # inactive threads CAS a past-the-end slot with an impossible
+        # compare value (the bfs_frontier idiom)
+        dirty, old = ctx.atomic_cas(st.glob["dirty"],
+                                    jnp.where(sw, a, k),
+                                    jnp.where(sw, 0, -1),
+                                    jnp.ones_like(a))
+        won = sw & (old == 0)
+        ndirty = ctx.atomic_add(st.glob["ndirty"],
+                                jnp.where(won, 0, OOB), 1)
+        switched = st.glob["switched"].at[
+            jnp.where(sw, i, OOB)].set(1, mode="drop")
+        return st.set_glob(gain=gain, csave=csave, dirty=dirty,
+                           ndirty=ndirty, switched=switched)
+
+    return KernelDef(
+        "streamcluster", (stage,),
+        writes=("gain", "csave", "dirty", "ndirty", "switched"),
+        reads=("px", "py", "cx", "cy", "cand", "assign", "gain", "csave",
+               "dirty", "ndirty", "switched"),
+        combines={"gain": "sum", "csave": "sum", "dirty": "max",
+                  "ndirty": "sum", "switched": "sum"},
+        donates=("gain", "csave", "dirty", "ndirty", "switched"),
+        est_block_work=64.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# hotspot (Rodinia hotspot): the real thermal update, promoted from the
+# stencil2d skeleton to a chain-driven workload.  The temperature and power
+# grids arrive through hotspot's one-value-per-line text files (rodinia_io);
+# each iteration stages a haloed temperature tile into shared memory and
+# applies the RC thermal step; the chain ping-pongs t <-> t_out across
+# `iters` launches with the power grid pinned in __constant__ space.
+# --------------------------------------------------------------------------
+def make_hotspot(h: int, w: int, tile_y: int = 8, tile_x: int = 8,
+                 cap: float = 0.5, rx: float = 0.1, ry: float = 0.1,
+                 rz: float = 0.05, amb: float = 80.0) -> KernelDef:
+    def load(ctx, st):
+        tx, ty, _ = ctx.tid3
+        bx, by, _ = ctx.bid3
+        row, col = by * tile_y + ty, bx * tile_x + tx
+        t = st.glob["t"]
+        at = lambda r, c: t[jnp.clip(r, 0, h - 1), jnp.clip(c, 0, w - 1)]
+        s = st.shared["s"].at[ty + 1, tx + 1].set(at(row, col))
+        s = s.at[jnp.where(ty == 0, 0, OOB), tx + 1].set(
+            at(row - 1, col), mode="drop")
+        s = s.at[jnp.where(ty == tile_y - 1, tile_y + 1, OOB), tx + 1].set(
+            at(row + 1, col), mode="drop")
+        s = s.at[ty + 1, jnp.where(tx == 0, 0, OOB)].set(
+            at(row, col - 1), mode="drop")
+        s = s.at[ty + 1, jnp.where(tx == tile_x - 1, tile_x + 1, OOB)].set(
+            at(row, col + 1), mode="drop")
+        return st.set_shared(s=s)
+
+    def compute(ctx, st):
+        tx, ty, _ = ctx.tid3
+        bx, by, _ = ctx.bid3
+        row, col = by * tile_y + ty, bx * tile_x + tx
+        rc, cc = jnp.clip(row, 0, h - 1), jnp.clip(col, 0, w - 1)
+        s = st.shared["s"]
+        tc = s[ty + 1, tx + 1]
+        p = st.glob["p"][rc, cc]
+        v = tc + cap * (
+            p
+            + ry * (s[ty, tx + 1] + s[ty + 2, tx + 1] - 2.0 * tc)
+            + rx * (s[ty + 1, tx] + s[ty + 1, tx + 2] - 2.0 * tc)
+            + rz * (amb - tc))
+        idx = jnp.where((row < h) & (col < w), row, OOB)
+        t_out = st.glob["t_out"].at[idx, cc].set(v, mode="drop")
+        return st.set_glob(t_out=t_out)
+
+    return KernelDef(
+        "hotspot", (load, compute), writes=("t_out",),
+        reads=("t", "p", "t_out"),
+        shared={"s": ((tile_y + 2, tile_x + 2), jnp.float32)},
+        combines={"t_out": "sum"},     # t_out re-zeroed per launch: exact
+        donates=("t_out",),            # ping-pong target of the t<->t_out swap
+        est_block_work=tile_y * tile_x * 14.0,
+    )
+
+
+# --------------------------------------------------------------------------
 # Suite registry: kernel + launch config + inputs + numpy oracle
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -995,6 +1322,11 @@ def build_suite(scale: int = 1) -> list[SuiteEntry]:
     entries.append(entry_backprop_layer())
     entries.append(entry_lud_diag())
     entries.append(entry_srad_step(scale))
+    entries.append(entry_lavamd())
+    entries.append(entry_nn())
+    entries.append(entry_kmeans())
+    entries.append(entry_streamcluster())
+    entries.append(entry_hotspot())
 
     return entries
 
@@ -1276,4 +1608,272 @@ def entry_srad_step(scale: int = 1, iters: int = 2,
         "srad_step", ("barrier", "dim3", "chain"), stats_k, grid1, block,
         None, margs, ref, chain=chain, tol=1e-4, rodinia="srad",
         dim3_free=False,
+    )
+
+
+def entry_lavamd(nboxes: int = 8, ppb: int = 32, nnei: int = 3,
+                 alpha: float = 0.5) -> SuiteEntry:
+    kernel = make_lavamd(nboxes, ppb, nnei, alpha)
+    n = nboxes * ppb
+
+    def margs(r):
+        nbr = np.empty((nboxes, nnei), np.int32)
+        nbr[:, 0] = np.arange(nboxes)                    # home box first
+        nbr[:, 1] = (np.arange(nboxes) + 1) % nboxes     # ring neighbors
+        for k in range(2, nnei):
+            nbr[:, k] = r.integers(0, nboxes, nboxes)
+        return {"pos": r.uniform(-2.0, 2.0, n).astype(np.float32),
+                "q": r.uniform(0.1, 1.0, n).astype(np.float32),
+                "nbr": nbr,
+                "force": np.zeros(n, np.float32)}
+
+    def ref(a):
+        pos = np.asarray(a["pos"], np.float32)
+        q = np.asarray(a["q"], np.float32)
+        nbr = np.asarray(a["nbr"])
+        force = np.zeros(n, np.float32)
+        for b in range(nboxes):
+            xi = pos[b * ppb:(b + 1) * ppb]
+            acc = np.zeros(ppb, np.float32)
+            for k in range(nnei):
+                nb = int(nbr[b, k])
+                y = pos[nb * ppb:(nb + 1) * ppb]
+                qq = q[nb * ppb:(nb + 1) * ppb]
+                d = xi[:, None] - y[None, :]
+                acc = acc + np.sum(qq[None, :] * np.exp(-alpha * d * d),
+                                   axis=1, dtype=np.float32)
+            force[b * ppb:(b + 1) * ppb] = acc
+        return {"force": force}
+
+    return SuiteEntry(
+        "lavamd", ("barrier", "demotion", "const"), kernel, nboxes, ppb,
+        None, margs, ref, const=("pos", "q", "nbr"), tol=1e-4,
+        rodinia="lavaMD",
+    )
+
+
+def entry_nn(n: int = 256, block: int = 64, knn: int = 8) -> SuiteEntry:
+    grid = n // block
+    reduce_k = make_nn_reduce(n, block)
+    select_k = make_nn_select(grid)
+
+    def margs(r):
+        lat = r.uniform(0.0, 90.0, n).astype(np.float32)
+        lng = r.uniform(0.0, 180.0, n).astype(np.float32)
+        # round-trip through the cane record-file format: the parsed
+        # arrays are what the kernels AND the oracle both consume
+        lat, lng = rodinia_io.parse_records(
+            rodinia_io.format_records(lat, lng))
+        return {"lat": lat, "lng": lng,
+                "target": np.asarray([30.0, 90.0], np.float32),
+                "taken": np.zeros(n, np.int32),
+                "pval": np.zeros(grid, np.float32),
+                "pidx": np.zeros(grid, np.int32),
+                "out_d": np.zeros(knn, np.float32),
+                "out_i": np.zeros(knn, np.int32),
+                "step": np.zeros(1, np.int32)}
+
+    def ref(a):
+        lat = np.asarray(a["lat"], np.float32)
+        lng = np.asarray(a["lng"], np.float32)
+        tgt = np.asarray(a["target"], np.float32)
+        work = (lat - tgt[0]) ** 2 + (lng - tgt[1]) ** 2
+        taken = np.zeros(n, np.int32)
+        out_d = np.zeros(knn, np.float32)
+        out_i = np.zeros(knn, np.int32)
+        for t in range(knn):
+            w = int(np.argmin(work))     # first minimum: lowest index
+            out_d[t] = work[w]
+            out_i[t] = w
+            taken[w] = 1
+            work[w] = np.inf
+        return {"out_d": out_d, "out_i": out_i, "taken": taken}
+
+    chain = LaunchChain(
+        steps=(ChainStep(reduce_k, grid, block),
+               ChainStep(select_k, 1, grid,
+                         prepare=lambda it, bufs: {
+                             "step": jnp.full((1,), it, jnp.int32)},
+                         update=lambda bufs: {"step": bufs["step"] + 1})),
+        repeat=knn,
+    )
+    return SuiteEntry(
+        "nn", ("barrier", "chain", "const"), reduce_k, grid, block, None,
+        margs, ref, chain=chain, const=("lat", "lng", "target"),
+        rodinia="nn", dim3_free=False,
+    )
+
+
+def entry_kmeans(n: int = 256, k: int = 4, block: int = 64,
+                 repeat: int = 12) -> SuiteEntry:
+    grid = n // block
+    assign_k = make_kmeans_assign(n, k)
+    update_k = make_kmeans_update(k)
+
+    def margs(r):
+        centers = np.asarray([[10, 10], [40, 12], [12, 44], [44, 40]],
+                             np.float32)[:k]
+        which = r.integers(0, k, n)
+        px = (centers[which, 0] + r.integers(-4, 5, n)).astype(np.float32)
+        py = (centers[which, 1] + r.integers(-4, 5, n)).astype(np.float32)
+        return {"px": px, "py": py,
+                "cx": px[:k].copy(), "cy": py[:k].copy(),
+                "assign": np.zeros(n, np.int32),
+                "changed": np.zeros(1, np.int32),
+                "sumx": np.zeros(k, np.float32),
+                "sumy": np.zeros(k, np.float32),
+                "count": np.zeros(k, np.int32)}
+
+    def ref(a):
+        px = np.asarray(a["px"], np.float32)
+        py = np.asarray(a["py"], np.float32)
+        cx = np.asarray(a["cx"], np.float32).copy()
+        cy = np.asarray(a["cy"], np.float32).copy()
+        assign = np.asarray(a["assign"]).copy()
+        sx = np.zeros(k, np.float32)
+        sy = np.zeros(k, np.float32)
+        cnt = np.zeros(k, np.int32)
+        moved = 0
+        for _ in range(repeat):
+            d = ((px[:, None] - cx[None, :]) ** 2
+                 + (py[:, None] - cy[None, :]) ** 2)
+            best = np.argmin(d, axis=1).astype(np.int32)
+            moved = int((best != assign).sum())
+            assign = best
+            cnt = np.bincount(best, minlength=k).astype(np.int32)
+            sx = np.bincount(best, weights=px,
+                             minlength=k).astype(np.float32)
+            sy = np.bincount(best, weights=py,
+                             minlength=k).astype(np.float32)
+            safe = np.maximum(cnt, 1).astype(np.float32)
+            cx = np.where(cnt == 0, cx, sx / safe).astype(np.float32)
+            cy = np.where(cnt == 0, cy, sy / safe).astype(np.float32)
+            if moved == 0:
+                break
+        return {"assign": assign, "cx": cx, "cy": cy, "count": cnt,
+                "sumx": sx, "sumy": sy,
+                "changed": np.asarray([moved], np.int32)}
+
+    def prep_assign(it, bufs):
+        if it == 0:
+            return {}
+        return {"changed": jnp.zeros_like(bufs["changed"]),
+                "sumx": jnp.zeros_like(bufs["sumx"]),
+                "sumy": jnp.zeros_like(bufs["sumy"]),
+                "count": jnp.zeros_like(bufs["count"])}
+
+    def upd_assign(bufs):
+        # device-resident re-zero of the per-iteration accumulators
+        return {"changed": jnp.zeros_like(bufs["changed"]),
+                "sumx": jnp.zeros_like(bufs["sumx"]),
+                "sumy": jnp.zeros_like(bufs["sumy"]),
+                "count": jnp.zeros_like(bufs["count"])}
+
+    chain = LaunchChain(
+        steps=(ChainStep(assign_k, grid, block, prepare=prep_assign,
+                         update=upd_assign),
+               ChainStep(update_k, k, 8)),
+        repeat=repeat,                # upper bound; stop flag exits early
+        stop=lambda bufs: int(np.asarray(bufs["changed"])[0]) == 0,
+        device_stop=lambda bufs: bufs["changed"][0] == 0,
+        check_every=3,
+    )
+    return SuiteEntry(
+        "kmeans", ("atomic", "chain"), assign_k, grid, block, None,
+        margs, ref, chain=chain, const=("px", "py"), rodinia="kmeans",
+        dim3_free=False,
+    )
+
+
+def entry_streamcluster(n: int = 256, k: int = 8,
+                        block: int = 64) -> SuiteEntry:
+    grid = n // block
+    kernel = make_streamcluster(n, k)
+
+    def margs(r):
+        return {"px": r.integers(0, 100, n).astype(np.int32),
+                "py": r.integers(0, 100, n).astype(np.int32),
+                "cx": r.integers(0, 100, k).astype(np.int32),
+                "cy": r.integers(0, 100, k).astype(np.int32),
+                "cand": r.integers(0, 100, 2).astype(np.int32),
+                "assign": r.integers(0, k, n).astype(np.int32),
+                "gain": np.zeros(1, np.int32),
+                "csave": np.zeros(k, np.int32),
+                "dirty": np.zeros(k, np.int32),
+                "ndirty": np.zeros(1, np.int32),
+                "switched": np.zeros(n, np.int32)}
+
+    def ref(a):
+        px = np.asarray(a["px"], np.int64)
+        py = np.asarray(a["py"], np.int64)
+        cx, cy = np.asarray(a["cx"]), np.asarray(a["cy"])
+        assign = np.asarray(a["assign"])
+        cand = np.asarray(a["cand"])
+        dcur = (px - cx[assign]) ** 2 + (py - cy[assign]) ** 2
+        dcand = (px - cand[0]) ** 2 + (py - cand[1]) ** 2
+        sw = dcand < dcur
+        save = dcur - dcand
+        gain = np.asarray([save[sw].sum()], np.int32)
+        csave = np.bincount(assign[sw], weights=save[sw].astype(np.float64),
+                            minlength=k).astype(np.int32)
+        dirty = np.zeros(k, np.int32)
+        dirty[np.unique(assign[sw])] = 1
+        return {"gain": gain, "csave": csave, "dirty": dirty,
+                "switched": sw.astype(np.int32)}
+
+    return SuiteEntry(
+        "streamcluster", ("atomic", "atomic_cas"), kernel, grid, block,
+        None, margs, ref,
+        const=("px", "py", "cx", "cy", "cand", "assign"),
+        rodinia="streamcluster",
+        # the CAS winner's distinct-dirty counter dedups per device
+        nondeterministic_shard=("ndirty",),
+    )
+
+
+def entry_hotspot(h: int = 32, w: int = 64, iters: int = 4,
+                  cap: float = 0.5, rx: float = 0.1, ry: float = 0.1,
+                  rz: float = 0.05, amb: float = 80.0) -> SuiteEntry:
+    kernel = make_hotspot(h, w, cap=cap, rx=rx, ry=ry, rz=rz, amb=amb)
+
+    def margs(r):
+        temp = r.uniform(60.0, 100.0, (h, w)).astype(np.float32)
+        power = r.uniform(0.0, 1.0, (h, w)).astype(np.float32)
+        # round-trip through hotspot's temp_*/power_* file format: the
+        # parsed grids are what the kernels AND the oracle both consume
+        temp = rodinia_io.parse_grid(rodinia_io.format_grid(temp), h, w)
+        power = rodinia_io.parse_grid(rodinia_io.format_grid(power), h, w)
+        return {"t": temp, "p": power,
+                "t_out": np.zeros((h, w), np.float32)}
+
+    def ref(a):
+        t = np.asarray(a["t"], np.float32).copy()
+        p = np.asarray(a["p"], np.float32)
+        for _ in range(iters):
+            tp = np.pad(t, 1, mode="edge")
+            north, south = tp[:-2, 1:-1], tp[2:, 1:-1]
+            west, east = tp[1:-1, :-2], tp[1:-1, 2:]
+            t = (t + cap * (p + ry * (north + south - 2.0 * t)
+                            + rx * (west + east - 2.0 * t)
+                            + rz * (amb - t))).astype(np.float32)
+        return {"t_out": t}
+
+    def prep(it, bufs):
+        if it == 0:
+            return {}
+        return {"t": bufs["t_out"], "t_out": jnp.zeros_like(bufs["t_out"])}
+
+    def upd(bufs):
+        # device-resident t <-> t_out ping-pong
+        return {"t": bufs["t_out"], "t_out": jnp.zeros_like(bufs["t_out"])}
+
+    chain = LaunchChain(
+        steps=(ChainStep(kernel, (w // 8, h // 8), (8, 8), prepare=prep,
+                         update=upd),),
+        repeat=iters,
+    )
+    return SuiteEntry(
+        "hotspot", ("barrier", "dim3", "chain", "const"), kernel,
+        (w // 8, h // 8), (8, 8), None, margs, ref, chain=chain,
+        const=("p",), tol=1e-4, rodinia="hotspot", dim3_free=False,
     )

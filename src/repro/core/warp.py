@@ -73,9 +73,31 @@ def shfl_down(val, delta):
 
 
 def shfl_xor(val, mask):
+    """__shfl_xor_sync: lane ``i`` reads ``val`` from lane ``i ^ mask``.
+
+    ``mask`` may be a scalar or a per-thread array of lane masks (the same
+    two forms :func:`shfl` accepts for its source lane).  Unlike ``shfl``,
+    CUDA does *not* wrap the xor'd lane: when ``i ^ mask`` falls outside
+    the segment (>= warp width) the caller keeps its own value, exactly
+    as in :func:`shfl_up`/:func:`shfl_down`.
+    """
     w = _to_warps(val)
-    src = jnp.arange(WARP_SIZE) ^ mask
-    return _flat(jnp.take(w, src, axis=1))
+    if jnp.ndim(mask) == 0:
+        src = jnp.arange(WARP_SIZE) ^ mask
+        ok = (src >= 0) & (src < WARP_SIZE)
+        gathered = jnp.take(w, jnp.clip(src, 0, WARP_SIZE - 1), axis=1)
+        okb = ok.reshape((1, WARP_SIZE) + (1,) * (w.ndim - 2))
+        return _flat(jnp.where(okb, gathered, w))
+    m = _to_warps(jnp.asarray(mask))
+    lane = jnp.arange(WARP_SIZE).reshape((1, WARP_SIZE) + (1,) * (m.ndim - 2))
+    src = lane ^ m
+    ok = (src >= 0) & (src < WARP_SIZE)
+    src_c = jnp.clip(src, 0, WARP_SIZE - 1)
+    gathered = jnp.take_along_axis(
+        w, src_c.reshape(src_c.shape + (1,) * (w.ndim - src_c.ndim)), axis=1
+    )
+    okb = ok.reshape(ok.shape + (1,) * (w.ndim - ok.ndim))
+    return _flat(jnp.where(okb, jnp.broadcast_to(gathered, w.shape), w))
 
 
 def vote_all(pred):

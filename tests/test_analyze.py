@@ -1,6 +1,6 @@
 """kernelcheck (repro.core.analyze): races, declaration audit, fusion.
 
-Two halves: (1) the whole 18-kernel suite must come back *clean* - the
+Two halves: (1) the whole 23-kernel suite must come back *clean* - the
 declarations the runtime trusts (reads/writes/combines/donates) are
 verified, not assumed - and (2) deliberately broken fixture kernels must
 trip each finding kind with the right kernel/stage/buffer named, because a
@@ -59,6 +59,32 @@ def test_fusion_keeps_reduction_barriers():
     assert report.clean
     # every reduction level reads another thread's slot: no pair mergeable
     assert all(not v.mergeable for v in report.fusion)
+
+
+def test_fusion_sees_value_preserving_writes():
+    """Soundness regression: a shared write that stores an *unchanged*
+    value under the sample inputs (here: zeros over zero-initialized
+    shared) still orders against other threads - the pair must NOT be
+    proven mergeable, or the optimizer fuses a real cross-thread tree
+    (the nn argmin select bug)."""
+    def wr(ctx, st):
+        return st.set_shared(
+            s=st.shared["s"].at[ctx.tid].set(st.glob["x"][ctx.tid]))
+
+    def rd(ctx, st):
+        v = st.shared["s"][jnp.minimum(ctx.tid + 1, 3)]
+        return st.set_glob(y=st.glob["y"].at[ctx.tid].set(v))
+
+    k = KernelDef("noop_write", (wr, rd), writes=("y",), reads=("x", "y"),
+                  shared={"s": ((4,), jnp.float32)})
+    art = analyze.analyze_fusion(
+        k, grid=1, block=4,
+        args={"x": jnp.zeros(4, jnp.float32), "y": jnp.zeros(4, jnp.float32)})
+    (v,) = art["verdicts"]
+    assert not v["mergeable"]
+    assert "different thread" in v["reason"]
+    # and the no-op write keeps the cell non-private (no scalarization)
+    assert not art["shared"]["s"]["private"]
 
 
 # --- planted bugs: each finding kind fires with the right location -----------

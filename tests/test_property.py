@@ -9,7 +9,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")  # not in the baked image
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import launch, warp
+from repro.core import atomics, launch, warp
 from repro.core import grain as grain_mod
 from repro.core.cuda_suite import OOB, make_histogram, make_vecadd
 from repro.core.kernel import KernelDef
@@ -172,12 +172,95 @@ def test_shfl_xor_involution(mask, seed):
 
 
 @SET
+@given(nwarps=st.integers(1, 3), mask=st.integers(0, 63),
+       seed=st.integers(0, 50))
+def test_shfl_xor_scalar_mask_matches_numpy(nwarps, mask, seed):
+    """shfl_xor vs a NumPy oracle over ALL masks 0..63: masks whose xor
+    leaves the 32-lane segment must return the caller's own value (CUDA
+    semantics), not a clamped lane-31 read."""
+    v = np.random.default_rng(seed).standard_normal(
+        nwarps * 32).astype(np.float32)
+    out = np.asarray(warp.shfl_xor(jnp.asarray(v), mask))
+    w = _warps_ref(v)
+    src = np.arange(32) ^ mask
+    ok = src < 32
+    want = np.where(ok[None, :], w[:, np.clip(src, 0, 31)], w).reshape(-1)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
+@given(nwarps=st.integers(1, 3), seed=st.integers(0, 50))
+def test_shfl_xor_array_mask_matches_numpy(nwarps, seed):
+    """Per-thread mask arrays (the form shfl accepts for src lanes)."""
+    r = np.random.default_rng(seed)
+    v = r.standard_normal(nwarps * 32).astype(np.float32)
+    mask = r.integers(0, 64, nwarps * 32)
+    out = np.asarray(warp.shfl_xor(jnp.asarray(v), jnp.asarray(mask)))
+    w, m = _warps_ref(v), _warps_ref(mask)
+    src = np.arange(32)[None, :] ^ m
+    ok = src < 32
+    want = np.where(ok, np.take_along_axis(w, np.clip(src, 0, 31), axis=1),
+                    w).reshape(-1)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
 @given(seed=st.integers(0, 50))
 def test_warp_reduce_matches_numpy(seed):
     v = np.random.default_rng(seed).standard_normal(96).astype(np.float32)
     out = np.asarray(warp.reduce(jnp.asarray(v), "add"))
     want = np.repeat(v.reshape(3, 32).sum(1), 32)
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+# --- atomics: OOB/negative-index sweeps vs a NumPy oracle --------------------
+_RMW_REF = {"add": lambda a, b: a + b, "max": max, "min": min}
+
+
+@SET
+@given(n=st.integers(2, 16), nthr=st.integers(1, 32),
+       op=st.sampled_from(["add", "max", "min"]), seed=st.integers(0, 200))
+def test_atomic_rmw_index_sweep_matches_numpy(n, nthr, op, seed):
+    """Sweep negative, in-range, past-the-end and duplicate indices: every
+    out-of-range index must store nothing (the pre-fix drop-mode scatter
+    wrapped negatives onto the tail), duplicates must all apply."""
+    r = np.random.default_rng(seed)
+    arr = r.integers(-50, 50, n).astype(np.int32)
+    idx = r.integers(-n - 2, n + 3, nthr)
+    val = r.integers(-50, 50, nthr).astype(np.int32)
+    fn = getattr(atomics, f"atomic_{op}")
+    out = np.asarray(fn(jnp.asarray(arr), jnp.asarray(idx), jnp.asarray(val)))
+    want = arr.copy()
+    for i, v in zip(idx, val):
+        if 0 <= i < n:
+            want[i] = _RMW_REF[op](want[i], v)
+    np.testing.assert_array_equal(out, want)
+
+
+@SET
+@given(n=st.integers(2, 12), nthr=st.integers(1, 24),
+       seed=st.integers(0, 200))
+def test_atomic_cas_first_index_sweep_matches_numpy(n, nthr, seed):
+    """cas_first under the same sweep: only the first occurrence of an
+    in-range index whose compare matches the pre-image stores; negative
+    indices must never claim (or corrupt) the tail."""
+    r = np.random.default_rng(seed)
+    arr = r.integers(0, 3, n).astype(np.int32)
+    idx = r.integers(-n - 2, n + 3, nthr)
+    cmp = r.integers(0, 3, nthr).astype(np.int32)
+    val = r.integers(10, 20, nthr).astype(np.int32)
+    out = np.asarray(atomics.atomic_cas_first(
+        jnp.asarray(arr), jnp.asarray(idx), jnp.asarray(cmp),
+        jnp.asarray(val)))
+    want = arr.copy()
+    seen = set()
+    for t in range(nthr):
+        i = int(idx[t])
+        first = i not in seen
+        seen.add(i)
+        if first and 0 <= i < n and arr[i] == cmp[t]:
+            want[i] = val[t]
+    np.testing.assert_array_equal(out, want)
 
 
 # --- device-memory runtime: copy round-trips + donation (ISSUE 5) ------------

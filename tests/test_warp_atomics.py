@@ -181,6 +181,114 @@ def test_atomic_cas_negative_index_per_backend(backend):
                                   [1, 0, 0, 0, 0, 0, 0, 0])
 
 
+# ---- negative-index wraparound regressions (drop-mode scatters) -----------
+def test_atomic_add_negative_index_drops():
+    """Regression: ``.at[idx].add(val, mode="drop")`` wraps negative
+    indices (JAX applies negative indexing before the OOB mode), so a
+    left-halo miss at -1 used to accumulate into the LAST element."""
+    arr = jnp.asarray([10, 20, 30], jnp.int32)
+    out = atomics.atomic_add(arr, jnp.asarray([-1]), jnp.asarray([5]))
+    np.testing.assert_array_equal(np.asarray(out), [10, 20, 30])
+
+
+def test_atomic_max_min_negative_index_drop():
+    arr = jnp.asarray([10, 20, 30], jnp.int32)
+    out = atomics.atomic_max(arr, jnp.asarray([-2]), jnp.asarray([99]))
+    np.testing.assert_array_equal(np.asarray(out), [10, 20, 30])
+    out = atomics.atomic_min(arr, jnp.asarray([-3]), jnp.asarray([-99]))
+    np.testing.assert_array_equal(np.asarray(out), [10, 20, 30])
+
+
+def test_atomic_add_mixed_negative_active_duplicate():
+    arr = jnp.zeros(3, jnp.int32)
+    idx = jnp.asarray([-1, 1, 1, 3, -2])
+    val = jnp.asarray([100, 4, 5, 100, 100])
+    out = atomics.atomic_add(arr, idx, val)
+    np.testing.assert_array_equal(np.asarray(out), [0, 9, 0])
+
+
+def test_atomic_cas_first_negative_index_stores_nothing():
+    """Regression: the gather `arr[idx]` and the drop-mode store both wrap
+    idx=-1 onto the last element, so a negative-index CAS used to claim
+    (and corrupt) arr[-1]."""
+    arr = jnp.zeros(4, jnp.int32)
+    out = atomics.atomic_cas_first(arr, jnp.asarray([-1]), jnp.asarray([0]),
+                                   jnp.asarray([9]))
+    np.testing.assert_array_equal(np.asarray(out), [0, 0, 0, 0])
+
+
+def test_atomic_cas_first_mixed_negative_and_active():
+    arr = jnp.zeros(4, jnp.int32)
+    idx = jnp.asarray([-1, 2, -4, 2])
+    out = atomics.atomic_cas_first(arr, idx, jnp.zeros(4, jnp.int32),
+                                   jnp.asarray([7, 8, 9, 5]))
+    # thread 1 is the first ACTIVE claimant of slot 2; negatives store
+    # nothing and must not shadow it in the first-occurrence mask
+    np.testing.assert_array_equal(np.asarray(out), [0, 0, 8, 0])
+
+
+@pytest.mark.parametrize("backend", ["loop", "loop_nowarp", "naive",
+                                     "vector", "pallas", "shard"])
+def test_atomic_negative_index_per_backend(backend):
+    """The wraparound bugs end-to-end: left-halo misses aim atomicAdd/Max
+    and first-wins CAS at index -1; the tail elements must stay untouched
+    under every lowering."""
+    from repro.core import launch
+    from repro.core.kernel import KernelDef
+
+    def stage(ctx, st):
+        out = st.glob["out"]
+        out = ctx.atomic_add(out, jnp.where(ctx.tid == 0, 1, -1), 1)
+        out = ctx.atomic_max(out, jnp.where(ctx.tid == 0, 2, -2), 9)
+        flags = ctx.atomic_cas_first(
+            st.glob["flags"], jnp.where(ctx.tid == 0, 0, -1),
+            jnp.zeros_like(ctx.tid), jnp.ones_like(ctx.tid))
+        return st.set_glob(out=out, flags=flags)
+
+    k = KernelDef("atomic_neg", (stage,), writes=("out", "flags"),
+                  reads=("out", "flags"),
+                  combines={"out": "sum", "flags": "max"})
+    out = launch(k, grid=1, block=8, backend=backend,
+                 args={"out": jnp.zeros(8, jnp.int32),
+                       "flags": jnp.zeros(8, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["out"]),
+                                  [0, 1, 9, 0, 0, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(out["flags"]),
+                                  [1, 0, 0, 0, 0, 0, 0, 0])
+
+
+# ---- shfl_xor out-of-segment + array-mask regressions ---------------------
+def test_shfl_xor_out_of_range_keeps_own_value():
+    """Regression: lane ^ mask >= 32 used to clamp to lane 31 via jnp.take's
+    clip mode; CUDA keeps the caller's own value out of segment."""
+    v = jnp.arange(32, dtype=jnp.float32)
+    out = np.asarray(warp.shfl_xor(v, 40))        # every lane lands >= 32
+    np.testing.assert_array_equal(out, np.arange(32, dtype=np.float32))
+
+
+def test_shfl_xor_partial_out_of_range():
+    v = jnp.arange(32, dtype=jnp.float32)
+    out = np.asarray(warp.shfl_xor(v, 17))
+    lane = np.arange(32)
+    src = lane ^ 17
+    want = np.where(src < 32, src, lane).astype(np.float32)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_shfl_xor_array_mask():
+    """Per-thread mask arrays, the same form shfl accepts for src lanes."""
+    v = jnp.arange(64, dtype=jnp.float32)
+    mask = np.tile(np.asarray([1, 40, 3, 16] * 8), 2)
+    out = np.asarray(warp.shfl_xor(v, jnp.asarray(mask)))
+    w = np.arange(64).reshape(2, 32)
+    lane = np.arange(32)[None, :]
+    src = lane ^ mask.reshape(2, 32)
+    ok = src < 32
+    want = np.where(ok, np.take_along_axis(w, np.clip(src, 0, 31), 1),
+                    w).reshape(-1).astype(np.float32)
+    np.testing.assert_array_equal(out, want)
+
+
 # ---- scalar-lane shuffle wrap regressions ---------------------------------
 def test_shfl_scalar_lane_wraps_mod_warp():
     """Regression: a scalar src_lane >= 32 used to index out of the lane
